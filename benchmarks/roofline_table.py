@@ -1,0 +1,72 @@
+"""EXPERIMENTS.md §Roofline: render the per-(arch x shape x mesh) table
+from the dry-run JSON artifacts in experiments/dryrun*/."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+V5E_HBM_GB = 16.0
+
+
+def load_results(dirname: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def render_table(rows, fit_budget_gb: float = V5E_HBM_GB) -> str:
+    lines = [
+        "| arch | shape | mesh | GiB/dev | fits | compute ms | memory ms |"
+        " collective ms | dominant | useful FLOP ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — |"
+                f" — | — | skip: {r['reason'][:40]} | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR |"
+                f" {r['error'][:40]} | | | | | |")
+            continue
+        gib = r["bytes_per_device"] / 2 ** 30
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {gib:.2f} |"
+            f" {'Y' if gib <= fit_budget_gb else 'N'} |"
+            f" {t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.2f} |"
+            f" {t['collective_s']*1e3:.2f} |"
+            f" {r['dominant'].split('_')[0]} |"
+            f" {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def main(fast: bool = True) -> dict:
+    base = os.path.join(os.getcwd(), "experiments", "dryrun")
+    rows = load_results(base)
+    if not rows:
+        emit("roofline.table", 0.0, "no dry-run artifacts found; run "
+             "PYTHONPATH=src python -m repro.launch.dryrun --all first")
+        return {}
+    ok = [r for r in rows if r["status"] == "ok"]
+    fit = sum(1 for r in ok
+              if r["bytes_per_device"] / 2 ** 30 <= V5E_HBM_GB)
+    dominant = {}
+    for r in ok:
+        dominant[r["dominant"]] = dominant.get(r["dominant"], 0) + 1
+    emit("roofline.summary", 0.0,
+         f"cases={len(rows)} ok={len(ok)} "
+         f"fits_16GiB={fit}/{len(ok)} dominant={dominant}")
+    print(render_table(rows))
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark harness entry point — one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+``BENCH_FAST=0 PYTHONPATH=src python -m benchmarks.run`` for full-length
+runs; the default is the fast profile (shorter episodes, fewer seeds).
+``--only fig7`` runs a single module.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MODULES = [
+    "fig1_motivation",
+    "fig7_utility",
+    "fig8_9_timeline",
+    "fig10_convergence",
+    "fig11_12_scalability",
+    "fig13_interference",
+    "fig14_15_slo",
+    "fig16_overhead",
+    "roofline_table",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names")
+    args = ap.parse_args()
+    fast = os.environ.get("BENCH_FAST", "1") != "0"
+    failures = 0
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod.main(fast=fast)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.00,ERROR", flush=True)
+            traceback.print_exc()
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Lower + compile one (arch x shape) on the production mesh and print the
+roofline terms — the smallest possible multi-pod dry-run demo.
+
+Run:  PYTHONPATH=src python examples/multipod_dryrun_demo.py \
+          [--arch qwen3-0.6b] [--shape decode_32k] [--multi-pod]
+
+NOTE: must run as its own process — the 512-device flag is set before jax
+initialises.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_case  # sets XLA_FLAGS on import
+
+    res = run_case(args.arch, args.shape, args.multi_pod, out_dir=None)
+    if res["status"] != "ok":
+        raise SystemExit(res.get("error", res.get("reason")))
+    r = res["roofline"]
+    print(f"\narch={args.arch} shape={args.shape} mesh={res['mesh']}")
+    print(f"bytes/device      : {res['bytes_per_device']/2**30:.2f} GiB")
+    print(f"compute roofline  : {r['compute_s']*1e3:.2f} ms")
+    print(f"memory roofline   : {r['memory_s']*1e3:.2f} ms")
+    print(f"collective        : {r['collective_s']*1e3:.2f} ms")
+    print(f"dominant term     : {res['dominant']}")
+    print(f"useful FLOP ratio : {res['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

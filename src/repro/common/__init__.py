@@ -1,0 +1,1 @@
+from repro.common import tree, types  # noqa: F401

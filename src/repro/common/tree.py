@@ -1,0 +1,64 @@
+"""Small pytree helpers used by the trainer / checkpointing."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flatten_with_paths(tree: Any) -> List[Tuple[str, jax.Array]]:
+    """Flatten a pytree into (dotted-path, leaf) pairs (stable order)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(entry) -> str:
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, jax.tree_util.GetAttrKey):
+        return str(entry.name)
+    return str(entry)
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree: Any, s) -> Any:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_map_with_path(fn: Callable[[str, jax.Array], Any], tree: Any) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn("/".join(_path_str(p) for p in path), leaf), tree
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def to_numpy(tree: Any) -> Any:
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+def tree_size_report(tree: Any, top: int = 12) -> str:
+    rows = sorted(flatten_with_paths(tree), key=lambda kv: -kv[1].size)[:top]
+    return "\n".join(f"  {k:60s} {tuple(v.shape)} {v.dtype}" for k, v in rows)
+
+
+def named_dict(tree: Any) -> Dict[str, np.ndarray]:
+    return {k: np.asarray(v) for k, v in flatten_with_paths(tree)}

@@ -1,0 +1,61 @@
+"""Shared type aliases and dtype policy helpers."""
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree of jnp arrays
+PRNGKey = jax.Array
+
+#: dtype policy used throughout: params are stored in ``param_dtype`` and
+#: compute runs in ``compute_dtype`` (bf16 on TPU targets, f32 on CPU tests).
+DEFAULT_PARAM_DTYPE = jnp.float32
+DEFAULT_COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast_tree(tree: Params, dtype) -> Params:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def shape_dtype(tree: Params) -> Dict[str, Any]:
+    """ShapeDtypeStruct skeleton of a pytree (for dry-runs / documentation)."""
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def param_count(tree: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def fmt_count(n: int) -> str:
+    for unit, div in (("T", 1e12), ("B", 1e9), ("M", 1e6), ("K", 1e3)):
+        if n >= div:
+            return f"{n / div:.2f}{unit}"
+    return str(n)
+
+
+def fmt_bytes(n: float) -> str:
+    for unit, div in (("TiB", 2**40), ("GiB", 2**30), ("MiB", 2**20), ("KiB", 2**10)):
+        if n >= div:
+            return f"{n / div:.2f}{unit}"
+    return f"{n:.0f}B"
+
+
+def assert_finite(name: str, x: jax.Array) -> None:
+    if not bool(jnp.isfinite(x).all()):
+        raise FloatingPointError(f"non-finite values in {name}")
+
+
+def merge_dicts(*ds: Mapping[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for d in ds:
+        out.update(d)
+    return out

@@ -1,0 +1,12 @@
+from repro.config.base import (  # noqa: F401
+    InputShape,
+    ModelConfig,
+    ServingConfig,
+    INPUT_SHAPES,
+)
+from repro.config.registry import (  # noqa: F401
+    get_config,
+    list_archs,
+    register,
+    get_reduced_config,
+)

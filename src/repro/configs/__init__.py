@@ -1,0 +1,29 @@
+"""Assigned architecture configs. Importing this package registers all
+architectures with ``repro.config.registry``; select via ``--arch <id>``."""
+from repro.configs import (  # noqa: F401
+    llama4_maverick_400b,
+    rwkv6_3b,
+    starcoder2_15b,
+    qwen2_vl_7b,
+    recurrentgemma_2b,
+    chatglm3_6b,
+    seamless_m4t_large_v2,
+    yi_34b,
+    arctic_480b,
+    qwen3_0_6b,
+    paper_edge_models,
+)
+
+#: the ten pool-assigned architectures (paper's own edge models excluded)
+ASSIGNED = [
+    "llama4-maverick-400b-a17b",
+    "rwkv6-3b",
+    "starcoder2-15b",
+    "qwen2-vl-7b",
+    "recurrentgemma-2b",
+    "chatglm3-6b",
+    "seamless-m4t-large-v2",
+    "yi-34b",
+    "arctic-480b",
+    "qwen3-0.6b",
+]

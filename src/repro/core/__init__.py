@@ -1,0 +1,4 @@
+"""BCEdge core: the paper's contribution — utility objective, discrete
+max-entropy SAC scheduler, baseline schedulers, interference predictor."""
+from repro.core.utility import utility, scheduling_slot  # noqa: F401
+from repro.core.sac import SACAgent  # noqa: F401

@@ -1,0 +1,411 @@
+"""Baseline schedulers (paper §V-B).
+
+* ``TACAgent``   — "Triton with Actor-Critic": advantage actor-critic
+                   WITHOUT the entropy term (the paper's key ablation).
+* ``PPOAgent``   — on-policy clipped-surrogate PPO.
+* ``DDQNAgent``  — double deep Q-network, epsilon-greedy.
+* ``GAScheduler``— genetic algorithm over the (b, m_c) grid; fitness = U.
+* ``EDFScheduler``— DeepRT-style earliest-deadline-first dynamic batching,
+                   no concurrency (m_c = 1).
+* ``FixedScheduler`` — static (b, m_c) (Triton default configuration).
+
+All expose the common interface: ``act(state) -> action``,
+``observe(s, a, r, s2, done)``, ``update() -> metrics``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.networks import mlp_apply, mlp_init, soft_update
+from repro.core.replay import ReplayBuffer
+from repro.train.optimizer import adam, apply_updates
+
+
+# =====================================================================
+# TAC — actor-critic without entropy
+# =====================================================================
+class _ACState(NamedTuple):
+    policy: Dict
+    value: Dict
+    opt_p: Tuple
+    opt_v: Tuple
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "lr"))
+def _ac_update(state: _ACState, batch: Dict, gamma: float, lr: float):
+    opt = adam(lr)
+    s, a, r, s2, done = (batch["s"], batch["a"], batch["r"], batch["s2"],
+                         batch["done"])
+    v2 = mlp_apply(state.value, s2)[:, 0]
+    target = r + gamma * (1 - done) * v2
+    target = jax.lax.stop_gradient(target)
+
+    def value_loss(vp):
+        v = mlp_apply(vp, s)[:, 0]
+        return jnp.mean(jnp.square(v - target))
+
+    lv, gv = jax.value_and_grad(value_loss)(state.value)
+    adv = jax.lax.stop_gradient(target - mlp_apply(state.value, s)[:, 0])
+
+    def policy_loss(pp):
+        logits = mlp_apply(pp, s)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        logp_a = jnp.take_along_axis(logp, a[:, None], -1)[:, 0]
+        return -jnp.mean(logp_a * adv)  # NOTE: no entropy bonus (TAC)
+
+    lp, gp = jax.value_and_grad(policy_loss)(state.policy)
+    uv, opt_v = opt.update(gv, state.opt_v, state.value)
+    up, opt_p = opt.update(gp, state.opt_p, state.policy)
+    new = _ACState(apply_updates(state.policy, up),
+                   apply_updates(state.value, uv), opt_p, opt_v)
+    return new, {"critic_loss": lv, "actor_loss": lp}
+
+
+class TACAgent:
+    name = "tac"
+    learns = True
+
+    def __init__(self, state_dim: int, n_actions: int, lr: float = 1e-3,
+                 gamma: float = 0.9, batch_size: int = 512, seed: int = 0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        opt = adam(lr)
+        policy = mlp_init(ks[0], state_dim, n_actions)
+        value = mlp_init(ks[1], state_dim, 1)
+        self.state = _ACState(policy, value, opt.init(policy),
+                              opt.init(value))
+        self.replay = ReplayBuffer(state_dim, 100_000, seed)
+        self.lr, self.gamma, self.batch_size = lr, gamma, batch_size
+        self._rng = jax.random.PRNGKey(seed + 1)
+        self.metrics: Dict[str, float] = {}
+
+    def act(self, s, greedy: bool = False) -> int:
+        logits = mlp_apply(self.state.policy, jnp.asarray(s))
+        if greedy:
+            return int(jnp.argmax(logits))
+        self._rng, k = jax.random.split(self._rng)
+        return int(jax.random.categorical(k, logits))
+
+    def observe(self, s, a, r, s2, done):
+        self.replay.add(s, a, r, s2, done)
+
+    def update(self):
+        if len(self.replay) < self.batch_size:
+            return {}
+        batch = {k: jnp.asarray(v) for k, v in
+                 self.replay.sample(self.batch_size).items()}
+        self.state, m = _ac_update(self.state, batch, self.gamma, self.lr)
+        self.metrics = {k: float(v) for k, v in m.items()}
+        return self.metrics
+
+
+# =====================================================================
+# PPO
+# =====================================================================
+class _PPOState(NamedTuple):
+    policy: Dict
+    value: Dict
+    opt_p: Tuple
+    opt_v: Tuple
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "clip"))
+def _ppo_update(state: _PPOState, batch: Dict, lr: float, clip: float):
+    opt = adam(lr)
+    s, a, logp_old, adv, ret = (batch["s"], batch["a"], batch["logp"],
+                                batch["adv"], batch["ret"])
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+
+    def policy_loss(pp):
+        logits = mlp_apply(pp, s)
+        logp = jax.nn.log_softmax(logits, -1)
+        logp_a = jnp.take_along_axis(logp, a[:, None], -1)[:, 0]
+        ratio = jnp.exp(logp_a - logp_old)
+        return -jnp.mean(jnp.minimum(
+            ratio * adv, jnp.clip(ratio, 1 - clip, 1 + clip) * adv))
+
+    def value_loss(vp):
+        v = mlp_apply(vp, s)[:, 0]
+        return jnp.mean(jnp.square(v - ret))
+
+    lp, gp = jax.value_and_grad(policy_loss)(state.policy)
+    lv, gv = jax.value_and_grad(value_loss)(state.value)
+    up, opt_p = opt.update(gp, state.opt_p, state.policy)
+    uv, opt_v = opt.update(gv, state.opt_v, state.value)
+    new = _PPOState(apply_updates(state.policy, up),
+                    apply_updates(state.value, uv), opt_p, opt_v)
+    return new, {"actor_loss": lp, "critic_loss": lv}
+
+
+class PPOAgent:
+    name = "ppo"
+    learns = True
+
+    def __init__(self, state_dim: int, n_actions: int, lr: float = 1e-3,
+                 gamma: float = 0.9, lam: float = 0.95, clip: float = 0.2,
+                 horizon: int = 256, epochs: int = 4, seed: int = 0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        opt = adam(lr)
+        policy = mlp_init(ks[0], state_dim, n_actions)
+        value = mlp_init(ks[1], state_dim, 1)
+        self.state = _PPOState(policy, value, opt.init(policy),
+                               opt.init(value))
+        self.lr, self.gamma, self.lam = lr, gamma, lam
+        self.clip, self.horizon, self.epochs = clip, horizon, epochs
+        self.buf: List[Tuple] = []
+        self._rng = jax.random.PRNGKey(seed + 1)
+        self.metrics: Dict[str, float] = {}
+
+    def act(self, s, greedy: bool = False) -> int:
+        logits = mlp_apply(self.state.policy, jnp.asarray(s))
+        if greedy:
+            return int(jnp.argmax(logits))
+        self._rng, k = jax.random.split(self._rng)
+        a = int(jax.random.categorical(k, logits))
+        logp = float(jax.nn.log_softmax(logits)[a])
+        self._last_logp = logp
+        return a
+
+    def observe(self, s, a, r, s2, done):
+        v = float(mlp_apply(self.state.value, jnp.asarray(s))[0])
+        self.buf.append((s, a, r, getattr(self, "_last_logp", 0.0), v,
+                         float(done)))
+
+    def update(self):
+        if len(self.buf) < self.horizon:
+            return {}
+        s = np.array([t[0] for t in self.buf], np.float32)
+        a = np.array([t[1] for t in self.buf], np.int32)
+        r = np.array([t[2] for t in self.buf], np.float32)
+        logp = np.array([t[3] for t in self.buf], np.float32)
+        v = np.array([t[4] for t in self.buf], np.float32)
+        done = np.array([t[5] for t in self.buf], np.float32)
+        # GAE
+        adv = np.zeros_like(r)
+        last = 0.0
+        next_v = np.append(v[1:], v[-1])
+        for t in reversed(range(len(r))):
+            delta = r[t] + self.gamma * (1 - done[t]) * next_v[t] - v[t]
+            last = delta + self.gamma * self.lam * (1 - done[t]) * last
+            adv[t] = last
+        ret = adv + v
+        batch = {"s": jnp.asarray(s), "a": jnp.asarray(a),
+                 "logp": jnp.asarray(logp), "adv": jnp.asarray(adv),
+                 "ret": jnp.asarray(ret)}
+        for _ in range(self.epochs):
+            self.state, m = _ppo_update(self.state, batch, self.lr,
+                                        self.clip)
+        self.buf.clear()
+        self.metrics = {k: float(v) for k, v in m.items()}
+        return self.metrics
+
+
+# =====================================================================
+# DDQN
+# =====================================================================
+class _DQNState(NamedTuple):
+    q: Dict
+    q_target: Dict
+    opt: Tuple
+    step: jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "lr", "tau"))
+def _ddqn_update(state: _DQNState, batch: Dict, gamma: float, lr: float,
+                 tau: float):
+    opt = adam(lr)
+    s, a, r, s2, done = (batch["s"], batch["a"], batch["r"], batch["s2"],
+                         batch["done"])
+    # double-Q: argmax under online net, value under target net
+    a2 = jnp.argmax(mlp_apply(state.q, s2), axis=-1)
+    q2 = jnp.take_along_axis(mlp_apply(state.q_target, s2),
+                             a2[:, None], -1)[:, 0]
+    target = jax.lax.stop_gradient(r + gamma * (1 - done) * q2)
+
+    def loss(qp):
+        q = jnp.take_along_axis(mlp_apply(qp, s), a[:, None], -1)[:, 0]
+        return jnp.mean(jnp.square(q - target))
+
+    l, g = jax.value_and_grad(loss)(state.q)
+    u, opt_state = opt.update(g, state.opt, state.q)
+    q = apply_updates(state.q, u)
+    q_target = soft_update(state.q_target, q, tau)
+    return _DQNState(q, q_target, opt_state, state.step + 1), {
+        "critic_loss": l}
+
+
+class DDQNAgent:
+    name = "ddqn"
+    learns = True
+
+    def __init__(self, state_dim: int, n_actions: int, lr: float = 1e-3,
+                 gamma: float = 0.9, tau: float = 0.005,
+                 batch_size: int = 512, eps_decay: float = 3e-4,
+                 seed: int = 0):
+        rng = jax.random.PRNGKey(seed)
+        opt = adam(lr)
+        q = mlp_init(rng, state_dim, n_actions)
+        self.state = _DQNState(q, jax.tree.map(jnp.copy, q), opt.init(q),
+                               jnp.zeros((), jnp.int32))
+        self.replay = ReplayBuffer(state_dim, 100_000, seed)
+        self.lr, self.gamma, self.tau = lr, gamma, tau
+        self.batch_size, self.eps_decay = batch_size, eps_decay
+        self.n_actions = n_actions
+        self.steps = 0
+        self.np_rng = np.random.default_rng(seed)
+        self.metrics: Dict[str, float] = {}
+
+    @property
+    def epsilon(self) -> float:
+        return max(0.05, 1.0 - self.eps_decay * self.steps)
+
+    def act(self, s, greedy: bool = False) -> int:
+        self.steps += 1
+        if not greedy and self.np_rng.random() < self.epsilon:
+            return int(self.np_rng.integers(self.n_actions))
+        return int(jnp.argmax(mlp_apply(self.state.q, jnp.asarray(s))))
+
+    def observe(self, s, a, r, s2, done):
+        self.replay.add(s, a, r, s2, done)
+
+    def update(self):
+        if len(self.replay) < self.batch_size:
+            return {}
+        batch = {k: jnp.asarray(v) for k, v in
+                 self.replay.sample(self.batch_size).items()}
+        self.state, m = _ddqn_update(self.state, batch, self.gamma,
+                                     self.lr, self.tau)
+        self.metrics = {k: float(v) for k, v in m.items()}
+        return self.metrics
+
+
+# =====================================================================
+# GA — heuristic baseline
+# =====================================================================
+class GAScheduler:
+    """Evolves a population of actions; fitness = observed utility.
+    Ignores the state (the paper's GA port optimises a static config)."""
+
+    name = "ga"
+    learns = True
+
+    def __init__(self, state_dim: int, n_actions: int, pop: int = 24,
+                 mut_p: float = 0.15, seed: int = 0):
+        self.n_actions = n_actions
+        self.rng = np.random.default_rng(seed)
+        self.pop = self.rng.integers(0, n_actions, size=pop)
+        self.fitness = np.full(pop, -np.inf)
+        self.cursor = 0
+        self.mut_p = mut_p
+        self.metrics: Dict[str, float] = {}
+
+    def act(self, s, greedy: bool = False) -> int:
+        if greedy:
+            return int(self.pop[int(np.argmax(self.fitness))])
+        return int(self.pop[self.cursor])
+
+    def observe(self, s, a, r, s2, done):
+        # running average fitness of the individual just evaluated
+        f = self.fitness[self.cursor]
+        self.fitness[self.cursor] = r if not np.isfinite(f) else 0.8 * f + 0.2 * r
+        self.cursor = (self.cursor + 1) % len(self.pop)
+
+    def update(self):
+        if self.cursor != 0 or not np.isfinite(self.fitness).all():
+            return {}
+        # generation step: tournament selection + crossover + mutation
+        n = len(self.pop)
+        order = np.argsort(-self.fitness)
+        elite = self.pop[order[: n // 4]]
+        children = []
+        while len(children) < n - len(elite):
+            pa, pb = self.rng.choice(elite, 2)
+            child = pa if self.rng.random() < 0.5 else pb
+            if self.rng.random() < self.mut_p:
+                child = int(self.rng.integers(self.n_actions))
+            children.append(child)
+        self.pop = np.concatenate([elite, np.array(children, dtype=int)])
+        best = float(np.max(self.fitness))
+        self.fitness = np.full(n, -np.inf)
+        self.metrics = {"best_fitness": best,
+                        "critic_loss": -best}  # convergence proxy
+        return self.metrics
+
+
+# =====================================================================
+# EDF (DeepRT) and Fixed
+# =====================================================================
+class EDFScheduler:
+    """DeepRT [12]: soft real-time EDF dynamic batching.
+
+    Faithful behaviour: picks the LARGEST batch whose estimated completion
+    (offline single-tenant latency profile + expected fill wait) still
+    meets the earliest deadline; never runs concurrent instances and —
+    crucially, per the paper's comparison table — has NO interference
+    prediction, so its feasibility estimates are single-tenant-optimistic
+    and break under multi-tenant contention.
+
+    Decodes queue length / age / SLO / model compute from the featurized
+    state (layout in serving/features.py).
+    """
+
+    name = "edf"
+    learns = False
+
+    def __init__(self, batch_sizes, concurrency_levels, queue_feature: int,
+                 n_models: int = 6, arrival_rps: float = 30.0,
+                 platform: str = "xavier_nx", **_):
+        self.batch_sizes = list(batch_sizes)
+        self.queue_feature = queue_feature
+        self.n_models = n_models
+        self.arrival_rps = arrival_rps
+        from repro.serving.platforms import PLATFORMS
+
+        self.hw = PLATFORMS[platform]
+
+    def act(self, s, greedy: bool = False) -> int:
+        from repro.serving import latency_model as lm
+        from repro.configs.paper_edge_models import EdgeModelProfile
+
+        qlen = max(1.0, float(np.expm1(s[self.queue_feature])))
+        slo_ms = float(s[self.n_models]) * 100.0
+        gflops = float(np.expm1(s[self.n_models + 1]))
+        age_ratio = float(np.expm1(s[self.queue_feature + 1]))
+        slack_ms = max(slo_ms * (1.0 - age_ratio), 2.0)
+        prof = EdgeModelProfile("x", "x", "x", (3, 224, 224), slo_ms,
+                                gflops, 10.0, 12.0)
+        pick = self.batch_sizes[0]
+        for b in sorted(self.batch_sizes, reverse=True):
+            fill_wait = max(0.0, b - qlen) * 1000.0 / self.arrival_rps
+            est = lm.estimate_execution(self.hw, prof, b, 1)  # single-tenant
+            if fill_wait + est.total_ms <= slack_ms:
+                pick = b
+                break
+        return self.batch_sizes.index(pick)  # m_c index 0 => m_c = 1
+
+    def observe(self, *a):
+        pass
+
+    def update(self):
+        return {}
+
+
+class FixedScheduler:
+    name = "fixed"
+    learns = False
+
+    def __init__(self, action: int, **_):
+        self.action = action
+
+    def act(self, s, greedy: bool = False) -> int:
+        return self.action
+
+    def observe(self, *a):
+        pass
+
+    def update(self):
+        return {}

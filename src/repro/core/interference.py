@@ -1,0 +1,154 @@
+"""SLO-aware interference predictor (paper §IV-F, Figs. 5/13/14).
+
+A two-layer MLP predicts the end-to-end latency of a (batch, concurrency)
+schedule from the currently available resources — capturing the *nonlinear*
+latency inflation when concurrent instances contend (the paper shows a
+linear-regression model has ~2x the error). Trained online from profiler
+feedback by minimising squared error.
+
+Feature vector (matches Fig. 5): [mem_avail, cpu_util, accel_util,
+m_c, b, model_gflops, model_mem].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.networks import mlp_apply, mlp_init
+from repro.train.optimizer import adam, apply_updates
+
+N_FEATURES = 7
+
+
+class _PredState(NamedTuple):
+    net: Dict
+    opt: Tuple
+
+
+@functools.partial(jax.jit, static_argnames=("lr",))
+def _pred_update(state: _PredState, x: jax.Array, y: jax.Array, lr: float):
+    opt = adam(lr)
+
+    def loss(net):
+        pred = mlp_apply(net, x)[:, 0]
+        return jnp.mean(jnp.square(pred - y))
+
+    l, g = jax.value_and_grad(loss)(state.net)
+    u, opt_state = opt.update(g, state.opt, state.net)
+    return _PredState(apply_updates(state.net, u), opt_state), l
+
+
+class NNInterferencePredictor:
+    """Predicts log-latency (seconds); exp() at the boundary for stability."""
+
+    name = "nn"
+
+    def __init__(self, lr: float = 1e-3, seed: int = 0,
+                 batch_size: int = 64):
+        rng = jax.random.PRNGKey(seed)
+        opt = adam(lr)
+        net = mlp_init(rng, N_FEATURES, 1)
+        self.state = _PredState(net, opt.init(net))
+        self.lr = lr
+        self.batch_size = batch_size
+        self.xs: list = []
+        self.ys: list = []
+        self.rng = np.random.default_rng(seed)
+        # running feature standardisation (Welford-ish, numpy)
+        self._mu = np.zeros(N_FEATURES, np.float32)
+        self._var = np.ones(N_FEATURES, np.float32)
+        self._count = 0
+
+    def _norm(self, X: np.ndarray) -> np.ndarray:
+        return (X - self._mu) / np.sqrt(self._var + 1e-6)
+
+    def _update_stats(self, X: np.ndarray) -> None:
+        X = np.atleast_2d(X)
+        n = len(X)
+        tot = self._count + n
+        mu = (self._mu * self._count + X.sum(0)) / tot
+        var = (self._var * self._count
+               + ((X - mu) ** 2).sum(0)) / tot
+        self._mu, self._var, self._count = mu.astype(np.float32), \
+            np.maximum(var, 1e-6).astype(np.float32), tot
+
+    def predict(self, feats: np.ndarray) -> float:
+        x = self._norm(np.asarray(feats, np.float32))
+        out = mlp_apply(self.state.net, jnp.asarray(x))
+        return float(np.exp(np.clip(out[..., 0], -10, 6)))
+
+    def observe(self, feats: np.ndarray, latency_s: float) -> None:
+        self.xs.append(np.asarray(feats, np.float32))
+        self.ys.append(np.log(max(latency_s, 1e-6)))
+        if len(self.xs) >= self.batch_size:
+            self.fit_step()
+
+    def fit_step(self, epochs: int = 8) -> float:
+        if not self.xs:
+            return 0.0
+        X = np.stack(self.xs)
+        self._update_stats(X)
+        x = jnp.asarray(self._norm(X))
+        y = jnp.asarray(np.asarray(self.ys, np.float32))
+        loss = 0.0
+        for _ in range(epochs):
+            self.state, loss = _pred_update(self.state, x, y, self.lr)
+        self.xs, self.ys = [], []
+        return float(loss)
+
+    def fit(self, X: np.ndarray, y_latency: np.ndarray,
+            epochs: int = 200) -> float:
+        """Offline fit (Fig. 13 protocol: 1600 train / 400 validation)."""
+        self._update_stats(np.asarray(X, np.float32))
+        x = jnp.asarray(self._norm(np.asarray(X, np.float32)))
+        y = jnp.asarray(np.log(np.maximum(y_latency, 1e-6)), jnp.float32)
+        loss = 0.0
+        for _ in range(epochs):
+            self.state, loss = _pred_update(self.state, x, y, self.lr)
+        return float(loss)
+
+
+class LinearInterferencePredictor:
+    """Ridge linear regression baseline [refs 16, 46 in the paper]."""
+
+    name = "linear"
+
+    def __init__(self, ridge: float = 1e-3, **_):
+        self.w = np.zeros(N_FEATURES + 1, np.float32)
+        self.ridge = ridge
+        self._X: list = []
+        self._y: list = []
+
+    def _design(self, X: np.ndarray) -> np.ndarray:
+        X = np.atleast_2d(X)
+        return np.concatenate([X, np.ones((len(X), 1))], axis=1)
+
+    def predict(self, feats: np.ndarray) -> float:
+        z = float((self._design(np.asarray(feats, np.float32)) @ self.w)[0])
+        return float(np.exp(np.clip(z, -10, 6)))
+
+    def observe(self, feats: np.ndarray, latency_s: float) -> None:
+        self._X.append(np.asarray(feats, np.float32))
+        self._y.append(np.log(max(latency_s, 1e-6)))
+        if len(self._X) % 256 == 0:
+            self.fit(np.stack(self._X), np.exp(np.asarray(self._y)))
+
+    def fit(self, X: np.ndarray, y_latency: np.ndarray, **_) -> float:
+        A = self._design(X)
+        y = np.log(np.maximum(y_latency, 1e-6))
+        reg = self.ridge * np.eye(A.shape[1])
+        self.w = np.linalg.solve(A.T @ A + reg, A.T @ y).astype(np.float32)
+        resid = A @ self.w - y
+        return float(np.mean(resid ** 2))
+
+
+def interference_features(mem_avail_gb: float, cpu_util: float,
+                          accel_util: float, m_c: int, b: int,
+                          gflops: float, model_mem_gb: float) -> np.ndarray:
+    return np.array([mem_avail_gb, cpu_util, accel_util, float(m_c),
+                     np.log1p(float(b)), np.log1p(gflops),
+                     model_mem_gb], np.float32)

@@ -1,0 +1,40 @@
+"""Small MLPs for the scheduler agents (paper §V-A: two ReLU hidden layers
+of 128 and 64 units) — pure JAX, shared by SAC / TAC / PPO / DDQN and the
+interference predictor."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+HIDDEN = (128, 64)
+
+
+def mlp_init(rng, in_dim: int, out_dim: int,
+             hidden: Sequence[int] = HIDDEN,
+             out_scale: float = 1.0) -> Dict:
+    sizes = [in_dim, *hidden, out_dim]
+    ks = jax.random.split(rng, len(sizes) - 1)
+    layers: List[Dict] = []
+    for i, (k, (a, b)) in enumerate(zip(ks, zip(sizes[:-1], sizes[1:]))):
+        scale = jnp.sqrt(2.0 / a)
+        if i == len(sizes) - 2:
+            scale = scale * out_scale
+        w = jax.random.normal(k, (a, b), jnp.float32) * scale
+        layers.append({"w": w, "b": jnp.zeros((b,), jnp.float32)})
+    return {"layers": layers}
+
+
+def mlp_apply(params: Dict, x: jax.Array) -> jax.Array:
+    h = x
+    layers = params["layers"]
+    for i, layer in enumerate(layers):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(layers) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def soft_update(target: Dict, online: Dict, tau: float) -> Dict:
+    return jax.tree.map(lambda t, o: (1 - tau) * t + tau * o, target, online)

@@ -1,0 +1,39 @@
+"""Uniform replay buffer (numpy ring), paper buffer size 1e6."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+
+class ReplayBuffer:
+    def __init__(self, state_dim: int, capacity: int = 1_000_000,
+                 seed: int = 0):
+        self.capacity = capacity
+        self.s = np.zeros((capacity, state_dim), np.float32)
+        self.a = np.zeros((capacity,), np.int32)
+        self.r = np.zeros((capacity,), np.float32)
+        self.s2 = np.zeros((capacity, state_dim), np.float32)
+        self.done = np.zeros((capacity,), np.float32)
+        self.idx = 0
+        self.full = False
+        self.rng = np.random.default_rng(seed)
+
+    def __len__(self) -> int:
+        return self.capacity if self.full else self.idx
+
+    def add(self, s, a, r, s2, done) -> None:
+        i = self.idx
+        self.s[i] = s
+        self.a[i] = a
+        self.r[i] = r
+        self.s2[i] = s2
+        self.done[i] = float(done)
+        self.idx = (i + 1) % self.capacity
+        self.full = self.full or self.idx == 0
+
+    def sample(self, batch: int) -> Dict[str, np.ndarray]:
+        n = len(self)
+        idx = self.rng.integers(0, n, size=batch)
+        return {"s": self.s[idx], "a": self.a[idx], "r": self.r[idx],
+                "s2": self.s2[idx], "done": self.done[idx]}

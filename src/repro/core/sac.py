@@ -1,0 +1,206 @@
+"""Discrete Soft Actor-Critic scheduler (paper §IV-B, Algorithm 1).
+
+Maximum-entropy objective (Eq. 5): maximise Σ γ^t [r + α H(π(·|s))].
+Components map 1:1 onto the paper:
+
+* twin soft-Q critics + target copies, min-of-two to curb overestimation;
+* soft state value (Eq. 8):  V(s) = π(s)ᵀ [Q(s) − α log π(s)];
+* critic loss = soft Bellman residual (Eq. 9);
+* actor loss = KL-projection surrogate (Eq. 11):
+      J_π = E_s [ π(s)ᵀ (α log π(s) − Q(s)) ];
+* automatic temperature (Eq. 12) against a target entropy H̄.
+
+All updates are jit-compiled pure functions over a NamedTuple state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.networks import mlp_apply, mlp_init, soft_update
+from repro.core.replay import ReplayBuffer
+from repro.train.optimizer import adam, apply_updates
+
+
+class SACState(NamedTuple):
+    policy: Dict
+    q1: Dict
+    q2: Dict
+    q1_target: Dict
+    q2_target: Dict
+    log_alpha: jax.Array
+    opt_policy: Tuple
+    opt_q1: Tuple
+    opt_q2: Tuple
+    opt_alpha: Tuple
+    step: jax.Array
+
+
+class SACConfig(NamedTuple):
+    gamma: float = 0.9
+    tau: float = 0.005
+    lr: float = 1e-3          # paper: Adam, lr 1e-3
+    batch_size: int = 512     # paper: mini-batch 512
+    reward_scale: float = 0.25
+    target_entropy_scale: float = 0.25
+    update_every: int = 1
+
+
+def _policy_dist(policy, s):
+    logits = mlp_apply(policy, s)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.exp(logp), logp
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_actions"))
+def sac_update(state: SACState, batch: Dict, cfg: SACConfig,
+               n_actions: int) -> Tuple[SACState, Dict]:
+    opt = adam(cfg.lr)
+    s, a, r, s2, done = (batch["s"], batch["a"],
+                         batch["r"] * cfg.reward_scale, batch["s2"],
+                         batch["done"])
+    alpha = jnp.exp(state.log_alpha)
+    target_entropy = cfg.target_entropy_scale * jnp.log(float(n_actions))
+
+    # ---- critic update (Eq. 7-9) -------------------------------------
+    pi2, logp2 = _policy_dist(state.policy, s2)
+    q1_t = mlp_apply(state.q1_target, s2)
+    q2_t = mlp_apply(state.q2_target, s2)
+    v2 = jnp.sum(pi2 * (jnp.minimum(q1_t, q2_t) - alpha * logp2), axis=-1)
+    target = r + cfg.gamma * (1.0 - done) * v2  # (B,)
+    target = jax.lax.stop_gradient(target)
+
+    def critic_loss(qp):
+        q = mlp_apply(qp, s)
+        qa = jnp.take_along_axis(q, a[:, None], axis=-1)[:, 0]
+        return 0.5 * jnp.mean(jnp.square(qa - target))
+
+    l1, g1 = jax.value_and_grad(critic_loss)(state.q1)
+    l2, g2 = jax.value_and_grad(critic_loss)(state.q2)
+    u1, opt_q1 = opt.update(g1, state.opt_q1, state.q1)
+    u2, opt_q2 = opt.update(g2, state.opt_q2, state.q2)
+    q1 = apply_updates(state.q1, u1)
+    q2 = apply_updates(state.q2, u2)
+
+    # ---- actor update (Eq. 11) ----------------------------------------
+    q_min = jax.lax.stop_gradient(
+        jnp.minimum(mlp_apply(q1, s), mlp_apply(q2, s)))
+
+    def actor_loss(pp):
+        pi, logp = _policy_dist(pp, s)
+        return jnp.mean(jnp.sum(pi * (alpha * logp - q_min), axis=-1))
+
+    la, ga = jax.value_and_grad(actor_loss)(state.policy)
+    up, opt_policy = opt.update(ga, state.opt_policy, state.policy)
+    policy = apply_updates(state.policy, up)
+
+    # ---- temperature update (Eq. 12) -----------------------------------
+    pi, logp = _policy_dist(policy, s)
+    entropy = -jnp.sum(pi * logp, axis=-1)
+
+    def alpha_loss(log_alpha):
+        return jnp.mean(jnp.exp(log_alpha) *
+                        jax.lax.stop_gradient(entropy - target_entropy))
+
+    lt, gt = jax.value_and_grad(alpha_loss)(state.log_alpha)
+    ut, opt_alpha = opt.update(gt, state.opt_alpha, state.log_alpha)
+    log_alpha = jnp.clip(state.log_alpha + ut, -4.0, 1.5)
+
+    # ---- target sync ----------------------------------------------------
+    q1_target = soft_update(state.q1_target, q1, cfg.tau)
+    q2_target = soft_update(state.q2_target, q2, cfg.tau)
+
+    new_state = SACState(policy, q1, q2, q1_target, q2_target, log_alpha,
+                         opt_policy, opt_q1, opt_q2, opt_alpha,
+                         state.step + 1)
+    metrics = {"critic_loss": 0.5 * (l1 + l2), "actor_loss": la,
+               "alpha": jnp.exp(log_alpha), "entropy": jnp.mean(entropy),
+               "alpha_loss": lt}
+    return new_state, metrics
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sac_act(policy: Dict, s: jax.Array, rng) -> jax.Array:
+    logits = mlp_apply(policy, s)
+    return jax.random.categorical(rng, logits)
+
+
+class SACAgent:
+    """Online wrapper: replay + act/observe/update, numpy at the boundary."""
+
+    name = "sac"
+    learns = True
+
+    def __init__(self, state_dim: int, n_actions: int,
+                 cfg: SACConfig = SACConfig(), seed: int = 0,
+                 buffer_size: int = 1_000_000):
+        self.cfg = cfg
+        self.n_actions = n_actions
+        rng = jax.random.PRNGKey(seed)
+        ks = jax.random.split(rng, 6)
+        opt = adam(cfg.lr)
+        # small policy head => near-uniform initial policy (max entropy)
+        policy = mlp_init(ks[0], state_dim, n_actions, out_scale=0.01)
+        q1 = mlp_init(ks[1], state_dim, n_actions)
+        q2 = mlp_init(ks[2], state_dim, n_actions)
+        log_alpha = jnp.zeros((), jnp.float32)
+        self.state = SACState(
+            policy, q1, q2, jax.tree.map(jnp.copy, q1),
+            jax.tree.map(jnp.copy, q2), log_alpha,
+            opt.init(policy), opt.init(q1), opt.init(q2),
+            opt.init(log_alpha), jnp.zeros((), jnp.int32))
+        self.replay = ReplayBuffer(state_dim, buffer_size, seed)
+        self._rng = jax.random.PRNGKey(seed + 1)
+        self.metrics: Dict[str, float] = {}
+
+    def act(self, s: np.ndarray, greedy: bool = False) -> int:
+        if greedy:
+            logits = mlp_apply(self.state.policy, jnp.asarray(s))
+            return int(jnp.argmax(logits))
+        self._rng, k = jax.random.split(self._rng)
+        return int(sac_act(self.state.policy, jnp.asarray(s), k))
+
+    def observe(self, s, a, r, s2, done) -> None:
+        self.replay.add(s, a, r, s2, done)
+
+    def update(self) -> Dict[str, float]:
+        if len(self.replay) < self.cfg.batch_size:
+            return {}
+        batch = {k: jnp.asarray(v) for k, v in
+                 self.replay.sample(self.cfg.batch_size).items()}
+        self.state, m = sac_update(self.state, batch, self.cfg,
+                                   self.n_actions)
+        self.metrics = {k: float(v) for k, v in m.items()}
+        return self.metrics
+
+    # ---- deployment checkpointing (paper §V-A: train offline, deploy) ---
+    def save(self, path: str) -> str:
+        from repro.train.checkpoint import save_checkpoint
+
+        nets = {"policy": self.state.policy, "q1": self.state.q1,
+                "q2": self.state.q2, "q1_target": self.state.q1_target,
+                "q2_target": self.state.q2_target,
+                "log_alpha": self.state.log_alpha}
+        return save_checkpoint(path, nets, {"n_actions": self.n_actions,
+                                            "step": int(self.state.step)})
+
+    def load(self, path: str) -> None:
+        from repro.train.checkpoint import load_checkpoint, restore_like
+
+        loaded = load_checkpoint(path)
+        if loaded["__meta__"].get("n_actions") != self.n_actions:
+            raise ValueError("checkpoint action-space mismatch")
+        nets = {"policy": self.state.policy, "q1": self.state.q1,
+                "q2": self.state.q2, "q1_target": self.state.q1_target,
+                "q2_target": self.state.q2_target,
+                "log_alpha": self.state.log_alpha}
+        restored = restore_like(nets, loaded)
+        self.state = self.state._replace(
+            policy=restored["policy"], q1=restored["q1"],
+            q2=restored["q2"], q1_target=restored["q1_target"],
+            q2_target=restored["q2_target"],
+            log_alpha=restored["log_alpha"])

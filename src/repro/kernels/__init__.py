@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the serving hot spots (flash/decode attention,
+RWKV-6 scan, RG-LRU scan, grouped MoE GEMM) + jnp oracles in ref.py."""
+from repro.kernels import ops  # noqa: F401

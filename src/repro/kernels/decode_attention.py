@@ -1,0 +1,98 @@
+"""Flash-decoding: one query token against a long KV cache, Pallas TPU.
+
+Grid (batch, q_head, cache_blocks) with the cache sweep innermost and
+sequential; the running max / denominator / accumulator live in VMEM
+scratch. Cache blocks stream HBM->VMEM; the query row and accumulator stay
+resident. Invalid cache slots (ring-buffer holes, unwritten tail) are
+masked via the ``valid`` operand, which also carries per-row positions so
+the same kernel serves linear and ring caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1.0e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, n_blocks: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bc, hd)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bc, hd)
+    valid = valid_ref[0]                          # (1, bc) bool
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1,bc)
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "block_c", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid: jax.Array, scale: float, *, block_c: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q (B,1,H,hd); k/v (B,C,KV,hd); valid (B,C) bool -> (B,1,H,hd)."""
+    B, _, H, hd = q.shape
+    C, KV = k.shape[1], k.shape[2]
+    qpk = H // KV
+    bc = min(block_c, C)
+    C_pad = -(-C // bc) * bc
+    kt = jnp.moveaxis(k, 2, 1)  # (B,KV,C,hd)
+    vt = jnp.moveaxis(v, 2, 1)
+    val = valid
+    if C_pad != C:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, C_pad - C), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, C_pad - C), (0, 0)))
+        val = jnp.pad(valid, ((0, 0), (0, C_pad - C)))
+    qt = jnp.moveaxis(q, 2, 1)  # (B,H,1,hd)
+    val = val[:, None, :]  # (B,1,C)
+    n_blocks = C_pad // bc
+
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               n_blocks=n_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bc, hd),
+                         lambda b, h, j, _qpk=qpk: (b, h // _qpk, j, 0)),
+            pl.BlockSpec((1, 1, bc, hd),
+                         lambda b, h, j, _qpk=qpk: (b, h // _qpk, j, 0)),
+            pl.BlockSpec((1, 1, bc), lambda b, h, j: (b, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, val)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,126 @@
+"""Blockwise online-softmax (flash) attention, Pallas TPU.
+
+TPU-native tiling: the grid is (batch, q_head, q_blocks, k_blocks) with the
+K dimension innermost and *sequential* — running max / denominator / output
+accumulator live in VMEM scratch and persist across the K sweep for one
+(b, h, q_block). Block shapes default to 128/256, MXU-aligned. GQA is
+handled in the K/V index maps (kv_head = q_head // q_per_kv) so KV blocks
+are fetched once per group member without materialising repeats.
+
+Causal + sliding-window masking is applied with a finite NEG constant so
+fully-masked K blocks contribute exp(0-likes)=0 without NaNs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, causal: bool,
+                  window: Optional[int], n_k_blocks: int, t_total: int):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    i = pl.program_id(2)
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = k_pos < t_total  # never attend to T-padding
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == n_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "block_q", "block_k",
+                     "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale: float, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False
+                    ) -> jax.Array:
+    """q (B,S,H,hd); k/v (B,T,KV,hd) -> (B,S,H,hd).
+
+    S and T are padded to the block sizes internally; positions are
+    0..S-1 / 0..T-1 (prefill semantics).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    qpk = H // KV
+    bq, bk = min(block_q, S), min(block_k, T)
+    S_pad = -(-S // bq) * bq
+    T_pad = -(-T // bk) * bk
+    qt = jnp.moveaxis(q, 2, 1)  # (B,H,S,hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if S_pad != S:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)))
+    if T_pad != T:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, T_pad - T), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, T_pad - T), (0, 0)))
+        # padded K columns must never win the max: rely on causal/window
+        # masking (q_pos < T <= k_pos for pad) when causal; else mask here
+    n_q, n_k = S_pad // bq, T_pad // bk
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=bq, block_k=bk, causal=causal,
+        window=window, n_k_blocks=n_k, t_total=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, _qpk=qpk: (b, h // _qpk, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, _qpk=qpk: (b, h // _qpk, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S_pad, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out[:, :, :S, :], 1, 2)

@@ -1,0 +1,61 @@
+"""Grouped per-expert GEMM, Pallas TPU.
+
+x (E, Cap, d) @ w (E, d, f) -> (E, Cap, f): grid (E, Cap/bc, f/bf, d/bd)
+with the contraction (d) sweep innermost and sequential, accumulating in a
+VMEM f32 scratch tile; MXU-aligned 128-multiples by default. The expert dim
+is the natural expert-parallel shard axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _moe_kernel(x_ref, w_ref, o_ref, acc_scr, *, n_d_blocks: int):
+    kd = pl.program_id(3)
+
+    @pl.when(kd == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)  # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)  # (bd, bf)
+    acc_scr[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(kd == n_d_blocks - 1)
+    def _final():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret"))
+def moe_matmul(x: jax.Array, w: jax.Array, *, block_c: int = 128,
+               block_f: int = 128, block_d: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """x (E,C,d) @ w (E,d,f) -> (E,C,f)."""
+    E, C, D = x.shape
+    F = w.shape[2]
+    bc, bf, bd = min(block_c, C), min(block_f, F), min(block_d, D)
+    Cp, Fp, Dp = (-(-C // bc) * bc, -(-F // bf) * bf, -(-D // bd) * bd)
+    xp = jnp.pad(x, ((0, 0), (0, Cp - C), (0, Dp - D)))
+    wp = jnp.pad(w, ((0, 0), (0, Dp - D), (0, Fp - F)))
+    n_d = Dp // bd
+
+    kernel = functools.partial(_moe_kernel, n_d_blocks=n_d)
+    out = pl.pallas_call(
+        kernel,
+        grid=(E, Cp // bc, Fp // bf, n_d),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, i, j, kd: (e, i, kd)),
+            pl.BlockSpec((1, bd, bf), lambda e, i, j, kd: (e, kd, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, i, j, kd: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, Fp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:, :C, :F]

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1.0e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: float, causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q (B,S,H,hd); k/v (B,T,KV,hd) -> (B,S,H,hd). Positions are 0..S-1."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg,
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((S, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid: jax.Array, scale: float) -> jax.Array:
+    """q (B,1,H,hd); k/v (B,C,KV,hd); valid (B,C) -> (B,1,H,hd)."""
+    B, _, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg, k.astype(jnp.float32)) * scale
+    scores = jnp.where(valid[:, None, None, :], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                   u: jax.Array, state: jax.Array):
+    """All of r/k/v/w: (B,S,H,hd) f32; u (H,hd); state (B,H,hd,hd).
+
+    Returns (out (B,S,H,hd), final_state). out_t = r_t·(state + u∘k_t v_tᵀ),
+    state' = w_t∘state + k_t v_tᵀ  (decay applied per *key* channel).
+    """
+
+    def step(st, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhi,bhij->bhj", rt, st + u[None, :, :, None] * kv)
+        st = wt[..., :, None] * st + kv
+        return st, out
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, w))
+    final, outs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 1), final
+
+
+def rglru_scan_ref(a: jax.Array, gated_in: jax.Array, h0: jax.Array):
+    """a, gated_in: (B,S,W) f32; h0 (B,W). h_t = a_t*h_{t-1} + gated_in_t."""
+
+    def step(h, xs):
+        at, gt = xs
+        h = at * h + gt
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated_in, 1, 0))
+    final, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1), final
+
+
+def moe_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (E,C,d) @ w (E,d,f) -> (E,C,f), per-expert GEMM."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,92 @@
+"""RG-LRU diagonal gated recurrence, chunked Pallas TPU kernel.
+
+h_t = a_t ∘ h_{t-1} + x_t  (x = sqrt(1-a²)·i·u precomputed by the layer).
+
+Diagonal recurrence => width channels are independent: grid is
+(batch, width_blocks, time_chunks), time innermost/sequential with the
+h-state block in VMEM scratch. Within a chunk, a first-order blelloch-free
+sequential fori steps time over a (block_w,)-vector — the VPU lane dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, x_ref, h0_ref, o_ref, hT_ref, h_scr, *,
+                  chunk: int, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)  # (chunk, bw)
+    x = x_ref[0].astype(jnp.float32)
+
+    def step(t, carry):
+        h, out = carry
+        h = a[t] * h + x[t]
+        out = out.at[t].set(h)
+        return h, out
+
+    h = h_scr[...][0]  # (bw,)
+    out0 = jnp.zeros_like(a)
+    h, out = jax.lax.fori_loop(0, chunk, step, (h, out0))
+    o_ref[0] = out.astype(o_ref.dtype)
+    h_scr[...] = h[None, :]
+
+    @pl.when(c == n_chunks - 1)
+    def _final():
+        hT_ref[...] = h_scr[...].astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "block_w", "interpret"))
+def rglru_scan(a: jax.Array, x: jax.Array, h0: jax.Array, *,
+               chunk: int = 128, block_w: int = 512,
+               interpret: bool = False):
+    """a, x: (B,S,W) f32; h0 (B,W) f32 -> (hs (B,S,W), h_final (B,W))."""
+    B, S, W = a.shape
+    ch = min(chunk, S)
+    bw = min(block_w, W)
+    S_pad = -(-S // ch) * ch
+    W_pad = -(-W // bw) * bw
+
+    def prep(z, pad_val=0.0):
+        if S_pad != S or W_pad != W:
+            z = jnp.pad(z, ((0, 0), (0, S_pad - S), (0, W_pad - W)),
+                        constant_values=pad_val)
+        return z
+
+    a_p = prep(a, 1.0)  # padded steps keep state
+    x_p = prep(x, 0.0)
+    h0_p = jnp.pad(h0, ((0, 0), (0, W_pad - W))) if W_pad != W else h0
+    n_chunks = S_pad // ch
+    n_w = W_pad // bw
+
+    kernel = functools.partial(_rglru_kernel, chunk=ch, n_chunks=n_chunks)
+    hs, h_final = pl.pallas_call(
+        kernel,
+        grid=(B, n_w, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, ch, bw), lambda b, wblk, c: (b, c, wblk)),
+            pl.BlockSpec((1, ch, bw), lambda b, wblk, c: (b, c, wblk)),
+            pl.BlockSpec((1, bw), lambda b, wblk, c: (b, wblk)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ch, bw), lambda b, wblk, c: (b, c, wblk)),
+            pl.BlockSpec((1, bw), lambda b, wblk, c: (b, wblk)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S_pad, W_pad), a.dtype),
+            jax.ShapeDtypeStruct((B, W_pad), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
+        interpret=interpret,
+    )(a_p, x_p, h0_p)
+    return hs[:, :S, :W], h_final[:, :W]

@@ -1,0 +1,105 @@
+"""RWKV-6 WKV recurrence, chunked Pallas TPU kernel.
+
+The GPU reference (RWKV CUDA) assigns one thread-block per (batch, head)
+and serially scans time with the state in registers. The TPU rethink: grid
+(batch, head, time_chunks) with the chunk dimension innermost and
+sequential — the (hd x hd) state matrix lives in VMEM scratch and carries
+across chunks; within a chunk a fori_loop steps time while the VPU
+vectorises over the hd lanes of the state rows. r/k/v/w stream in
+chunk-sized VMEM blocks.
+
+    out_t   = r_t · (state + u ∘ k_t v_tᵀ)
+    state' = w_t ∘ state + k_t v_tᵀ        (decay per key channel)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+                 state_scr, *, chunk: int, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)  # (chunk, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)     # (1, hd) -> (hd,)
+    u = u.reshape(-1)
+
+    def step(t, carry):
+        state, out = carry
+        kv = k[t][:, None] * v[t][None, :]          # (hd, hd)
+        y = (r[t][:, None] * (state + u[:, None] * kv)).sum(axis=0)
+        out = out.at[t].set(y)
+        state = w[t][:, None] * state + kv
+        return state, out
+
+    state = state_scr[...]
+    out0 = jnp.zeros_like(r)
+    state, out = jax.lax.fori_loop(0, chunk, step, (state, out0))
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+    state_scr[...] = state
+
+    @pl.when(c == n_chunks - 1)
+    def _final():
+        sT_ref[0, 0] = state_scr[...].astype(sT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, state: jax.Array, *, chunk: int = 64,
+               interpret: bool = False):
+    """r/k/v/w (B,S,H,hd) f32; u (H,hd); state (B,H,hd,hd) f32.
+
+    Returns (out (B,S,H,hd), final_state (B,H,hd,hd)). S padded to chunk.
+    """
+    B, S, H, hd = r.shape
+    ch = min(chunk, S)
+    S_pad = -(-S // ch) * ch
+    n_chunks = S_pad // ch
+
+    def prep(x, pad_val=0.0):
+        x = jnp.moveaxis(x, 2, 1)  # (B,H,S,hd)
+        if S_pad != S:
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, S_pad - S), (0, 0)),
+                        constant_values=pad_val)
+        return x
+
+    # pad decay with 1.0 so padded steps leave the state untouched
+    rt, kt, vt = prep(r), prep(k), prep(v)
+    wt = prep(w, pad_val=1.0)
+
+    kernel = functools.partial(_rwkv_kernel, chunk=ch, n_chunks=n_chunks)
+    out, s_final = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, ch, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, ch, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, ch, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, ch, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, ch, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S_pad, hd), r.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u, state)
+    return jnp.moveaxis(out[:, :, :S, :], 1, 2), s_final

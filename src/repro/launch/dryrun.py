@@ -1,0 +1,264 @@
+"""Multi-pod dry-run: prove every (arch x shape x mesh) lowers + compiles.
+
+MUST set the device-count flag before ANY other import (jax locks the
+device count on first init).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape prefill_32k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.config import INPUT_SHAPES, get_config  # noqa: E402
+from repro.config.base import InputShape, ModelConfig  # noqa: E402
+from repro.launch import roofline, sharding  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.train.optimizer import adam  # noqa: E402
+
+SERVE_DTYPE = jnp.bfloat16
+TRAIN_DTYPE = jnp.float32
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def build_case(arch: str, shape_name: str, mesh, sharding_mode: str = "tp"):
+    """Returns (fn, args_abstract, in_shardings) for jit lowering."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    dtype = TRAIN_DTYPE if shape.kind == "train" else SERVE_DTYPE
+    model = build_model(cfg, remat=(shape.kind == "train"),
+                        compute_dtype=(jnp.bfloat16
+                                       if shape.kind == "train" else None))
+    if shape.name == "long_500k" and not model.supports_shape(shape):
+        return None  # documented skip (DESIGN.md §4)
+
+    params_abs = model.abstract_params(dtype)
+    p_mode = "2d" if sharding_mode in ("2d", "decode2d") else "tp"
+    p_shard = sharding.param_shardings(mesh, params_abs, mode=p_mode)
+    inputs = model.input_specs(shape, SERVE_DTYPE)
+    in_shard = sharding.input_shardings(mesh, cfg, inputs,
+                                        mode=sharding_mode)
+
+    if shape.kind == "train":
+        opt = adam(1e-4)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_shard = jax.tree.map(
+            lambda _: None, opt_abs, is_leaf=lambda x: False)
+        # mu/nu shaped like params -> same shardings; step scalar replicated
+        opt_shard = jax.tree.map(
+            lambda leaf, ab: sharding.replicated(mesh)
+            if ab.ndim == 0 else None, opt_abs, opt_abs)
+
+        def match_param_sharding(opt_tree):
+            def fix(path, leaf):
+                # AdamState(step, mu, nu): mu/nu mirror the param tree
+                if path.startswith("1/") or path.startswith("2/"):
+                    sub = path.split("/", 1)[1]
+                    return _lookup(p_shard, sub)
+                return sharding.replicated(mesh)
+
+            from repro.common.tree import tree_map_with_path
+
+            return tree_map_with_path(fix, opt_tree)
+
+        def _lookup(tree, path):
+            node = tree
+            for part in path.split("/"):
+                if isinstance(node, (list, tuple)):
+                    node = node[int(part)]
+                else:
+                    node = node[part]
+            return node
+
+        opt_shard = match_param_sharding(opt_abs)
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            from repro.train.optimizer import apply_updates
+
+            params = apply_updates(params, updates)
+            return params, opt_state, loss
+
+        args = (params_abs, opt_abs, inputs)
+        shards = (p_shard, opt_shard, in_shard)
+        return train_step, args, shards, (0, 1)  # donate params+opt
+
+    if shape.kind == "prefill":
+        def prefill(params, batch):
+            return model.prefill(params, batch)
+
+        return prefill, (params_abs, inputs), (p_shard, in_shard), ()
+
+    # decode
+    cache_len = shape.seq_len
+    cache_abs = model.cache_spec(shape.global_batch, cache_len, SERVE_DTYPE)
+    c_shard = sharding.cache_shardings(mesh, cfg, cache_abs,
+                                       shape.global_batch,
+                                       mode=sharding_mode)
+
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    return serve_step, (params_abs, cache_abs, inputs), \
+        (p_shard, c_shard, in_shard), (1,)  # donate the KV cache
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = None, verbose: bool = True,
+             sharding_mode: str = "tp") -> Dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    if sharding_mode == "auto":
+        # best-known layout per shape kind (§Perf): decode of models whose
+        # bf16 weights exceed the model-axis HBM budget uses replicated
+        # batch + 2D weights + both-axes cache ("decode2d"); everything
+        # else keeps batch-on-data TP — for models that FIT at TP-16,
+        # sharded-batch TP psums (B/16,1,d) beat decode2d's full-batch
+        # psums by 16x (see EXPERIMENTS.md §Perf iteration log).
+        cfg_probe = get_config(arch)
+        w_gib_tp = cfg_probe.param_count_estimate() * 2 / 16 / 2 ** 30
+        sharding_mode = ("decode2d"
+                         if (INPUT_SHAPES[shape_name].kind == "decode"
+                             and w_gib_tp > 4.0)
+                         else "tp")
+    case = build_case(arch, shape_name, mesh, sharding_mode)
+    result: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "sharding": sharding_mode}
+    if case is None:
+        result["status"] = "skipped"
+        result["reason"] = "full-attention arch at 512k decode (DESIGN.md §4)"
+        _emit(result, out_dir, verbose)
+        return result
+    fn, args, shards, donate = case
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    try:
+        t0 = time.time()
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=shards,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        colls = roofline.parse_collectives(hlo)
+        wl = roofline.workload_cost(cfg, shape)
+        per_chip_coll = colls["total_bytes"]  # per-device HLO shapes
+        terms = wl.terms(chips, per_chip_coll)
+        dominant = max(("compute_s", "memory_s", "collective_s"),
+                       key=lambda k: terms[k])
+        result.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "bytes_per_device": int(getattr(
+                mem, "temp_size_in_bytes", 0) + getattr(
+                mem, "argument_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "cost_flops_raw": float(cost.get("flops", 0.0)) if cost else 0.0,
+            "collectives": colls,
+            "analytic": {
+                "flops": wl.flops, "hbm_bytes": wl.hbm_bytes,
+                "model_flops": wl.model_flops,
+                "param_bytes": wl.param_bytes,
+            },
+            "roofline": {k: terms[k] for k in
+                         ("compute_s", "memory_s", "collective_s")},
+            "dominant": dominant,
+            "useful_flops_ratio": (wl.model_flops / wl.flops
+                                   if wl.flops else 0.0),
+        })
+    except Exception as e:  # noqa: BLE001 — a failure here is a finding
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+    _emit(result, out_dir, verbose)
+    return result
+
+
+def _emit(result: Dict, out_dir: Optional[str], verbose: bool) -> None:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(
+            out_dir,
+            f"{result['arch']}_{result['shape']}_{result['mesh']}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    if verbose:
+        if result["status"] == "ok":
+            r = result["roofline"]
+            print(f"[dryrun] {result['arch']:28s} {result['shape']:12s} "
+                  f"{result['mesh']:8s} OK "
+                  f"mem/dev={result['bytes_per_device']/2**30:.2f}GiB "
+                  f"compute={r['compute_s']*1e3:.2f}ms "
+                  f"memory={r['memory_s']*1e3:.2f}ms "
+                  f"coll={r['collective_s']*1e3:.2f}ms "
+                  f"dom={result['dominant'].split('_')[0]} "
+                  f"(compile {result['compile_s']:.0f}s)", flush=True)
+        elif result["status"] == "skipped":
+            print(f"[dryrun] {result['arch']:28s} {result['shape']:12s} "
+                  f"{result['mesh']:8s} SKIP ({result['reason']})",
+                  flush=True)
+        else:
+            print(f"[dryrun] {result['arch']:28s} {result['shape']:12s} "
+                  f"{result['mesh']:8s} ERROR {result['error'][:160]}",
+                  flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned archs x shapes on this mesh")
+    ap.add_argument("--sharding", default="auto",
+                    choices=["auto", "tp", "2d", "decode2d"])
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.getcwd(), "experiments", "dryrun"))
+    args = ap.parse_args()
+
+    from repro.configs import ASSIGNED
+
+    if args.all:
+        archs = ASSIGNED
+        shapes = list(INPUT_SHAPES)
+    else:
+        archs = [args.arch] if args.arch else ASSIGNED
+        shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            res = run_case(arch, shape, args.multi_pod, args.out_dir,
+                           sharding_mode=args.sharding)
+            failures += res["status"] == "error"
+    if failures:
+        raise SystemExit(f"{failures} dry-run case(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state. Single pod: 16x16 = 256 chips, axes
+(data, model). Multi-pod: 2x16x16 = 512 chips with a leading "pod" axis
+(data parallelism across pods — the lowest-bandwidth boundary gets the
+least-frequent collective, the gradient all-reduce).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for tests (requires >= n_data*n_model host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def batch_axes(mesh) -> tuple:
+    """The axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,275 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = FLOPs / (chips * peak_FLOP/s)
+    memory     = HBM bytes / (chips * HBM_bw)
+    collective = collective bytes per chip / link_bw
+
+Sources:
+* FLOPs/HBM-bytes: an ANALYTIC workload model (documented below). XLA's
+  ``cost_analysis`` does NOT multiply while-loop bodies by their trip
+  count (verified empirically), and every model here scans over layer
+  units — so raw cost_analysis under-reports by ~n_layers x. We therefore
+  report the analytic numbers as the roofline terms and the raw
+  cost_analysis numbers alongside (with the caveat) as a lower bound.
+* collective bytes: parsed from the SPMD-partitioned ``compiled.as_text()``
+  (shapes there are per-device). Ops inside while bodies are multiplied by
+  the loop's trip count when XLA annotates it, else by the known scan
+  lengths passed in ``loop_hints``.
+
+Hardware constants (TPU v5e): 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI (per the brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.config.base import InputShape, ModelConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+# =====================================================================
+# analytic workload model
+# =====================================================================
+@dataclasses.dataclass
+class WorkloadCost:
+    flops: float            # total FLOPs for the step (global)
+    hbm_bytes: float        # total HBM traffic for the step (global)
+    model_flops: float      # 6*N*D (train) / 2*N*D (inference) reference
+    param_bytes: float
+
+    def terms(self, chips: int, collective_bytes_per_chip: float,
+              dtype_bytes: int = 2) -> Dict[str, float]:
+        return {
+            "compute_s": self.flops / (chips * PEAK_FLOPS),
+            "memory_s": self.hbm_bytes / (chips * HBM_BW),
+            "collective_s": collective_bytes_per_chip / ICI_BW,
+            "model_flops": self.model_flops,
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+        }
+
+
+def _layer_flops_per_token(cfg: ModelConfig, kind: str, ctx_len: float,
+                           decode: bool) -> float:
+    """Forward FLOPs per token for one layer of ``kind``."""
+    d, hd, H, KV = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    f = cfg.d_ff
+    fl = 0.0
+    if kind in ("attn", "attn_dense", "local_attn"):
+        fl += 2 * d * H * hd + 2 * 2 * d * KV * hd + 2 * H * hd * d  # qkvo
+        fl += 4 * ctx_len * H * hd                                   # scores+values
+        if cfg.enc_dec:  # cross attention
+            enc_len = ctx_len / 4
+            fl += 2 * d * H * hd + 2 * H * hd * d + 4 * enc_len * H * hd
+        if cfg.n_experts and kind != "attn_dense":
+            fl += 2 * d * cfg.n_experts                              # router
+            fl += cfg.top_k * (3 if cfg.activation in ("silu", "geglu")
+                               else 2) * 2 * d * f
+            if cfg.moe_dense_residual:
+                fl += 3 * 2 * d * (cfg.dense_ff or f)
+        else:
+            width = (cfg.dense_ff or f) if kind == "attn_dense" else f
+            n_mats = 3 if cfg.activation in ("silu", "geglu") else 2
+            fl += n_mats * 2 * d * width
+    elif kind == "rwkv":
+        fl += 5 * 2 * d * d + 2 * d * d        # r/k/v/g/o + W_o
+        fl += 10 * 2 * d * 32                  # token-shift loras
+        fl += 5 * d * hd                       # wkv recurrence per token
+        fl += 2 * 2 * d * cfg.d_ff + 2 * d * d  # channel mix
+    elif kind == "rglru":
+        w = cfg.rglru_width or d
+        fl += 2 * 2 * d * w + 2 * 2 * w * w + 2 * 4 * w + 6 * w + 2 * w * d
+        n_mats = 3 if cfg.activation in ("silu", "geglu") else 2
+        fl += n_mats * 2 * d * cfg.d_ff
+    return fl
+
+
+def workload_cost(cfg: ModelConfig, shape: InputShape,
+                  dtype_bytes: int = 2) -> WorkloadCost:
+    B, S = shape.global_batch, shape.seq_len
+    kinds = cfg.layer_kinds()
+    params = cfg.param_count_estimate()
+    active_params = cfg.param_count_estimate(active_only=True)
+    p_bytes = params * dtype_bytes
+
+    if shape.kind == "decode":
+        n_tok = B  # one token per sequence
+        fl = 0.0
+        for kind in kinds:
+            ctx = S
+            if kind == "local_attn" or cfg.sliding_window:
+                ctx = min(S, cfg.sliding_window or 2048)
+            if kind in ("rwkv", "rglru"):
+                ctx = 0
+            fl += n_tok * _layer_flops_per_token(cfg, kind, ctx, True)
+        fl += n_tok * 2 * cfg.d_model * cfg.vocab_size
+        # HBM: weights (active experts only for small batches) + cache
+        expert_frac = min(1.0, B * cfg.top_k / max(cfg.n_experts, 1)) \
+            if cfg.n_experts else 1.0
+        moe_bytes = (params - active_params) * 0  # handled via frac below
+        w_bytes = p_bytes if not cfg.n_experts else (
+            active_params * dtype_bytes
+            + (params - active_params) * dtype_bytes * expert_frac)
+        cache_bytes = 0.0
+        for kind in kinds:
+            if kind in ("attn", "attn_dense", "local_attn"):
+                ctx = min(S, cfg.sliding_window or S)
+                if kind == "local_attn":
+                    ctx = min(S, cfg.sliding_window or 2048)
+                cache_bytes += 2 * B * ctx * cfg.n_kv_heads * cfg.head_dim \
+                    * dtype_bytes
+            elif kind == "rwkv":
+                hd = cfg.rwkv_head_size
+                cache_bytes += B * (cfg.d_model // hd) * hd * hd * 4
+            elif kind == "rglru":
+                cache_bytes += B * (cfg.rglru_width or cfg.d_model) * 4
+        hbm = w_bytes + cache_bytes + n_tok * cfg.d_model * dtype_bytes * \
+            len(kinds) * 8
+        model_fl = 2 * active_params * n_tok
+        return WorkloadCost(fl, hbm, model_fl, p_bytes)
+
+    # train / prefill: N = B*S tokens
+    n_tok = B * S
+    fl = 0.0
+    for kind in kinds:
+        ctx = S / 2  # causal average
+        if kind == "local_attn" or cfg.sliding_window:
+            ctx = min(S / 2, (cfg.sliding_window or 2048))
+        if kind in ("rwkv", "rglru"):
+            ctx = 0
+        fl += n_tok * _layer_flops_per_token(cfg, kind, ctx, False)
+    if cfg.enc_dec:
+        enc_tok = B * (S // 4)
+        for _ in range(cfg.n_enc_layers):
+            fl += enc_tok * _layer_flops_per_token(
+                dataclasses.replace(cfg, enc_dec=False), "attn", S / 8,
+                False)
+    if shape.kind == "train":
+        fl += n_tok * 2 * cfg.d_model * cfg.vocab_size  # lm head
+        fl *= 3  # fwd + bwd
+        acts = 2 * n_tok * cfg.d_model * dtype_bytes * len(kinds) * 10
+        hbm = 3 * p_bytes + 2 * p_bytes * 2 + acts  # w fwd/bwd + opt + acts
+        model_fl = 6 * active_params * n_tok
+    else:  # prefill
+        fl += B * 2 * cfg.d_model * cfg.vocab_size  # last-token logits
+        acts = 2 * n_tok * cfg.d_model * dtype_bytes * len(kinds) * 6
+        hbm = p_bytes + acts
+        model_fl = 2 * active_params * n_tok
+    return WorkloadCost(fl, hbm, model_fl, p_bytes)
+
+
+# =====================================================================
+# HLO collective parsing
+# =====================================================================
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_COMP_RE = re.compile(r"^(%?[\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count=\{"?(\d+)"?\}')
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for dim in dims.split(","):
+            if dim.strip():
+                n *= int(dim)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _computations(hlo_text: str) -> Dict[str, str]:
+    """Split an HLO module into {computation_name: body_text}."""
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and "{" in line:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            comps[cur].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def _while_trips(comps: Dict[str, str]) -> Dict[str, int]:
+    """Map while-BODY computation name -> trip count.
+
+    XLA CPU does not annotate ``known_trip_count``; scan loops compare an
+    iteration counter against a constant in the *condition* computation, so
+    we read the largest integer constant there. Nested loops compose by
+    multiplying through the call chain.
+    """
+    body_cond = {}
+    for comp, text in comps.items():
+        for m in re.finditer(
+                r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*"
+                r"body=%?([\w.\-]+)", text):
+            body_cond[m.group(2)] = (m.group(1), comp)
+    trips: Dict[str, int] = {}
+    for body, (cond, _parent) in body_cond.items():
+        consts = [int(c) for c in re.findall(
+            r"constant\((\d+)\)", comps.get(cond, ""))]
+        trips[body] = max(consts) if consts else 1
+
+    # propagate nesting: a body called from another body inherits its factor
+    def factor(body, depth=0):
+        if depth > 8 or body not in body_cond:
+            return 1
+        _, parent = body_cond[body]
+        return trips.get(body, 1) * factor(parent, depth + 1) \
+            if parent in body_cond else trips.get(body, 1)
+
+    return {b: factor(b) for b in body_cond}
+
+
+def parse_collectives(hlo_text: str,
+                      loop_hints: Optional[Dict[str, int]] = None
+                      ) -> Dict[str, float]:
+    """Sum per-device collective bytes from a partitioned HLO module.
+
+    Ops inside while bodies are multiplied by the loop trip count (derived
+    from the loop-condition constant — XLA CPU lacks known_trip_count
+    annotations; nested loops multiply through).
+
+    NOTE: the CPU backend legalises bf16 dots to f32, so partial-sum
+    all-reduces that would be bf16 on TPU appear as f32 here — treat the
+    bytes as a ~2x-conservative upper bound for bf16 models.
+    """
+    comps = _computations(hlo_text)
+    trips = _while_trips(comps)
+    totals = {op: 0.0 for op in COLLECTIVE_OPS}
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    for comp, text in comps.items():
+        mult = trips.get(comp, 1)
+        for line in text.splitlines():
+            m = _OP_RE.match(line)
+            if m:
+                shape_str, op = m.group(1), m.group(2)
+                totals[op] += _shape_bytes(shape_str) * mult
+                counts[op] += mult
+    out = {f"{op}_bytes": v for op, v in totals.items()}
+    out.update({f"{op}_count": float(c) for op, c in counts.items()})
+    out["total_bytes"] = sum(totals.values())
+    return out

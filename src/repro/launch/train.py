@@ -1,0 +1,36 @@
+"""Training launcher: ``PYTHONPATH=src python -m repro.launch.train
+--arch qwen3-0.6b --reduced --steps 100``.
+
+Full (non-reduced) configs are for real TPU pods; on this host always pass
+``--reduced``.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.config import get_config, get_reduced_config, list_archs
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch) if args.reduced \
+        else get_config(args.arch)
+    trainer = Trainer(cfg, TrainerConfig(
+        batch=args.batch, seq_len=args.seq, steps=args.steps, lr=args.lr,
+        ckpt_path=args.ckpt))
+    stats = trainer.run()
+    print(f"final loss: {stats['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

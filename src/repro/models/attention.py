@@ -1,0 +1,189 @@
+"""GQA attention: full-sequence (train/prefill) and single-token decode.
+
+Three full-sequence implementations, selected by ``impl``:
+
+* ``naive``   — materialises (S, T) scores; fine for short smoke shapes and
+                used as the correctness oracle.
+* ``chunked`` — lax.map over query chunks; peak memory O(C*T) instead of
+                O(S*T). This is the shape the dry-run lowers at 32k so the
+                compiled HLO never materialises a quadratic buffer.
+* ``kernel``  — Pallas flash-attention (TPU target; interpret-mode on CPU).
+
+Decode attends one new token against a KV cache. Caches are linear
+(``cache_len == max_seq``) or ring buffers (``cache_len == window``) for
+sliding-window layers; ring entries store keys already rotated at their
+absolute positions.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import dense_init, norm_init, apply_norm
+from repro.models.rope import apply_rope
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------- params
+def attn_init(rng, cfg: ModelConfig, dtype) -> Dict:
+    ks = jax.random.split(rng, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype,
+                         scale=1.0 / jnp.sqrt(cfg.n_heads * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd, "rmsnorm", dtype)
+        p["k_norm"] = norm_init(hd, "rmsnorm", dtype)
+    return p
+
+
+def _project_qkv(p: Dict, x: jax.Array, cfg: ModelConfig,
+                 positions: jax.Array,
+                 mrope_positions=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q, "rmsnorm")
+        k = apply_norm(p["k_norm"], k, "rmsnorm")
+    q = apply_rope(q, positions, cfg.rope, cfg.rope_theta, mrope_positions)
+    k = apply_rope(k, positions, cfg.rope, cfg.rope_theta, mrope_positions)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale) -> jax.Array:
+    """q (B,Sq,H,hd), k/v (B,T,KV,hd), mask (B,Sq,T) bool -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _causal_mask(q_pos: jax.Array, k_pos: jax.Array,
+                 window: Optional[int]) -> jax.Array:
+    """q_pos (B,Sq), k_pos (B,T) -> (B,Sq,T) bool."""
+    m = q_pos[:, :, None] >= k_pos[:, None, :]
+    if window is not None:
+        m &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    return m
+
+
+# ---------------------------------------------------------------- full seq
+def attention_full(p: Dict, x: jax.Array, cfg: ModelConfig,
+                   positions: jax.Array, *, window: Optional[int] = None,
+                   impl: str = "auto", chunk: int = 512,
+                   mrope_positions=None) -> jax.Array:
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions, mrope_positions)
+    scale = 1.0 / float(cfg.head_dim) ** 0.5
+    if impl == "auto":
+        impl = "naive" if S <= 2048 else "chunked"
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(q, k, v, positions=positions,
+                                   window=window, scale=scale)
+    elif impl == "naive":
+        mask = _causal_mask(positions, positions, window)
+        out = _sdpa(q, k, v, mask, scale)
+    elif impl == "chunked":
+        if S % chunk:
+            chunk = S  # degenerate fallback for odd smoke shapes
+        n = S // chunk
+        # §Perf (context parallelism): head counts (40/28/10/56...) do not
+        # divide the 16-way model axis, so GSPMD otherwise shards head_dim
+        # and psums the FULL (B,KV,G,C,T) scores tensor per chunk (the
+        # 960 GiB/step finding on llama4 prefill). Sharding K/V on the
+        # SEQUENCE dim makes per-chunk scores local; only the softmax
+        # stats and the (B,C,H,hd) output reduce across the model axis.
+        from repro.models.shard_hooks import constrain
+
+        bspec = ("pod", "data")
+        k = constrain(k, bspec, "model", None, None)
+        v = constrain(v, bspec, "model", None, None)
+        qc = jnp.moveaxis(q.reshape(B, n, chunk, cfg.n_heads, cfg.head_dim),
+                          1, 0)  # (n, B, C, H, hd)
+        qc = constrain(qc, None, bspec, None, None, None)
+        pc = jnp.moveaxis(positions.reshape(B, n, chunk), 1, 0)
+
+        def one(args):
+            qi, pi = args
+            mask = _causal_mask(pi, positions, window)
+            return _sdpa(qi, k, v, mask, scale)
+
+        out = jax.lax.map(one, (qc, pc))  # (n, B, C, H, hd)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    else:
+        raise ValueError(f"unknown attention impl {impl!r}")
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------- decode
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> Dict:
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def kv_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> Dict:
+    hd = cfg.head_dim
+    shp = (batch, cache_len, cfg.n_kv_heads, hd)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype),
+            "v": jax.ShapeDtypeStruct(shp, dtype)}
+
+
+def _write_cache(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
+    """cache (B,C,KV,hd), new (B,1,KV,hd), slot (B,) -> updated cache."""
+
+    def row(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n, (s, 0, 0))
+
+    return jax.vmap(row)(cache, new, slot)
+
+
+def attention_decode(p: Dict, x: jax.Array, cache: Dict, pos: jax.Array,
+                     cfg: ModelConfig, *, window: Optional[int] = None,
+                     impl: str = "auto") -> Tuple[jax.Array, Dict]:
+    """x (B,1,d); pos (B,) absolute position of the new token."""
+    B = x.shape[0]
+    C = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos[:, None])
+    slot = pos % C if window is not None else pos
+    cache = {"k": _write_cache(cache["k"], k_new, slot),
+             "v": _write_cache(cache["v"], v_new, slot)}
+    # absolute position held by each cache slot
+    slots = jnp.arange(C, dtype=jnp.int32)[None, :]
+    if window is not None:
+        # ring buffer: slot s holds the largest p <= pos with p % C == s
+        k_pos = pos[:, None] - ((pos[:, None] - slots) % C)
+        valid = (k_pos >= 0) & (k_pos > pos[:, None] - window)
+    else:
+        k_pos = slots
+        valid = slots <= pos[:, None]
+    scale = 1.0 / float(cfg.head_dim) ** 0.5
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+
+        out = kops.decode_attention(q, cache["k"], cache["v"], valid, scale)
+    else:
+        mask = valid[:, None, :]  # (B,1,C)
+        out = _sdpa(q, cache["k"], cache["v"], mask, scale)
+    return out.reshape(B, 1, -1) @ p["wo"], cache

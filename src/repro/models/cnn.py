@@ -1,0 +1,285 @@
+"""The paper's six served edge models (Table IV) as runnable JAX networks.
+
+These power the runnable edge-serving examples and tests. They are compact
+but architecturally faithful implementations (residual basic blocks for
+ResNet-18, SE inverted residuals for MobileNetV3/EfficientNet-B0, parallel
+inception branches for Inception-v3, a CSP-style backbone + detect head
+for YOLOv5s, and a small BERT encoder for TinyBERT). The serving simulator
+uses the analytic profiles in configs/paper_edge_models.py; these nets are
+the real-execution path.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------- conv utils
+def conv_init(rng, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(rng, (kh, kw, cin, cout), jnp.float32) * \
+        jnp.sqrt(2.0 / fan_in)
+    return w.astype(dtype)
+
+
+def conv(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def bn(p, x, eps=1e-5):
+    # inference-style norm over batch+spatial (we serve, not train, these)
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+# ---------------------------------------------------------------- ResNet-18
+def resnet18_init(rng, n_classes=1000, width=16):
+    """width=64 is the true ResNet-18; smaller widths for CPU smoke."""
+    ks = iter(jax.random.split(rng, 64))
+    w = width
+    p: Dict = {"stem": conv_init(next(ks), 7, 7, 3, w),
+               "stem_bn": bn_init(w)}
+    stages = [(w, 2), (2 * w, 2), (4 * w, 2), (8 * w, 2)]
+    cin = w
+    p["blocks"] = []
+    for cout, n_blocks in stages:
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and cout != w) else 1
+            blk = {
+                "c1": conv_init(next(ks), 3, 3, cin, cout),
+                "bn1": bn_init(cout),
+                "c2": conv_init(next(ks), 3, 3, cout, cout),
+                "bn2": bn_init(cout),
+                "stride": stride,
+            }
+            if stride != 1 or cin != cout:
+                blk["proj"] = conv_init(next(ks), 1, 1, cin, cout)
+            p["blocks"].append(blk)
+            cin = cout
+    p["head"] = dense_init(next(ks), cin, n_classes, jnp.float32)
+    return p
+
+
+def resnet18_apply(p, x):
+    x = relu(bn(p["stem_bn"], conv(x, p["stem"], stride=2)))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for blk in p["blocks"]:
+        h = relu(bn(blk["bn1"], conv(x, blk["c1"], stride=blk["stride"])))
+        h = bn(blk["bn2"], conv(h, blk["c2"]))
+        sc = conv(x, blk["proj"], stride=blk["stride"]) if "proj" in blk \
+            else x
+        x = relu(h + sc)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["head"]
+
+
+# ------------------------------------------------- MobileNetV3 / EffNet-B0
+def _se_init(ks, c, r=4):
+    return {"w1": conv_init(next(ks), 1, 1, c, max(1, c // r)),
+            "w2": conv_init(next(ks), 1, 1, max(1, c // r), c)}
+
+
+def _se(p, x):
+    s = jnp.mean(x, axis=(1, 2), keepdims=True)
+    s = relu(conv(s, p["w1"]))
+    s = jax.nn.sigmoid(conv(s, p["w2"]))
+    return x * s
+
+
+def _mbconv_init(ks, cin, cout, expand, stride, kernel=3):
+    mid = cin * expand
+    blk = {"expand": conv_init(next(ks), 1, 1, cin, mid),
+           "bn_e": bn_init(mid),
+           "dw": conv_init(next(ks), kernel, kernel, 1, mid),
+           "bn_d": bn_init(mid),
+           "se": _se_init(ks, mid),
+           "proj": conv_init(next(ks), 1, 1, mid, cout),
+           "bn_p": bn_init(cout),
+           "stride": stride}
+    return blk
+
+
+def _mbconv(blk, x):
+    h = jax.nn.hard_swish(bn(blk["bn_e"], conv(x, blk["expand"])))
+    # depthwise: groups == channels, weight (k,k,1,mid)
+    mid = h.shape[-1]
+    h = jax.nn.hard_swish(bn(blk["bn_d"], conv(
+        h, blk["dw"], stride=blk["stride"], groups=mid)))
+    h = _se(blk["se"], h)
+    h = bn(blk["bn_p"], conv(h, blk["proj"]))
+    if blk["stride"] == 1 and x.shape[-1] == h.shape[-1]:
+        h = h + x
+    return h
+
+
+def mobilenetv3_init(rng, n_classes=1000, width=8):
+    ks = iter(jax.random.split(rng, 128))
+    p: Dict = {"stem": conv_init(next(ks), 3, 3, 3, width),
+               "stem_bn": bn_init(width)}
+    spec = [(width, 1, 1), (2 * width, 4, 2), (2 * width, 3, 1),
+            (4 * width, 4, 2), (6 * width, 4, 1), (10 * width, 6, 2)]
+    cin = width
+    p["blocks"] = []
+    for cout, expand, stride in spec:
+        p["blocks"].append(_mbconv_init(ks, cin, cout, expand, stride))
+        cin = cout
+    p["head1"] = conv_init(next(ks), 1, 1, cin, 4 * cin)
+    p["head_bn"] = bn_init(4 * cin)
+    p["head2"] = dense_init(next(ks), 4 * cin, n_classes, jnp.float32)
+    return p
+
+
+def mobilenetv3_apply(p, x):
+    x = jax.nn.hard_swish(bn(p["stem_bn"], conv(x, p["stem"], stride=2)))
+    for blk in p["blocks"]:
+        x = _mbconv(blk, x)
+    x = jax.nn.hard_swish(bn(p["head_bn"], conv(x, p["head1"])))
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["head2"]
+
+
+efficientnet_b0_init = mobilenetv3_init   # same MBConv family
+efficientnet_b0_apply = mobilenetv3_apply
+
+
+# ---------------------------------------------------------------- Inception
+def _inception_block_init(ks, cin, c1, c3, c5, cp):
+    return {
+        "b1": conv_init(next(ks), 1, 1, cin, c1),
+        "b3a": conv_init(next(ks), 1, 1, cin, c3 // 2),
+        "b3b": conv_init(next(ks), 3, 3, c3 // 2, c3),
+        "b5a": conv_init(next(ks), 1, 1, cin, c5 // 2),
+        "b5b": conv_init(next(ks), 5, 5, c5 // 2, c5),
+        "bp": conv_init(next(ks), 1, 1, cin, cp),
+    }
+
+
+def _inception_block(p, x):
+    b1 = relu(conv(x, p["b1"]))
+    b3 = relu(conv(relu(conv(x, p["b3a"])), p["b3b"]))
+    b5 = relu(conv(relu(conv(x, p["b5a"])), p["b5b"]))
+    bp = relu(conv(jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 1, 1, 1), "SAME"),
+        p["bp"]))
+    return jnp.concatenate([b1, b3, b5, bp], axis=-1)
+
+
+def inception_v3_init(rng, n_classes=1000, width=8):
+    ks = iter(jax.random.split(rng, 96))
+    p: Dict = {"stem": conv_init(next(ks), 3, 3, 3, 2 * width),
+               "stem_bn": bn_init(2 * width)}
+    cin = 2 * width
+    p["blocks"] = []
+    for mult in (1, 2, 3):
+        c = width * mult
+        p["blocks"].append(_inception_block_init(ks, cin, c, 2 * c, c, c))
+        cin = c + 2 * c + c + c
+    p["head"] = dense_init(next(ks), cin, n_classes, jnp.float32)
+    return p
+
+
+def inception_v3_apply(p, x):
+    x = relu(bn(p["stem_bn"], conv(x, p["stem"], stride=2)))
+    for i, blk in enumerate(p["blocks"]):
+        x = _inception_block(blk, x)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                                  (1, 2, 2, 1), "SAME")
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ p["head"]
+
+
+# ---------------------------------------------------------------- YOLOv5s
+def _csp_init(ks, cin, cout):
+    return {"c1": conv_init(next(ks), 1, 1, cin, cout // 2),
+            "c2": conv_init(next(ks), 1, 1, cin, cout // 2),
+            "c3": conv_init(next(ks), 3, 3, cout // 2, cout // 2),
+            "merge": conv_init(next(ks), 1, 1, cout, cout),
+            "bn": bn_init(cout)}
+
+
+def _csp(p, x):
+    a = jax.nn.silu(conv(x, p["c1"]))
+    a = a + jax.nn.silu(conv(a, p["c3"]))
+    b = jax.nn.silu(conv(x, p["c2"]))
+    return jax.nn.silu(bn(p["bn"], conv(jnp.concatenate([a, b], -1),
+                                        p["merge"])))
+
+
+def yolov5s_init(rng, n_classes=80, n_anchors=3, width=8):
+    ks = iter(jax.random.split(rng, 64))
+    p: Dict = {"stem": conv_init(next(ks), 6, 6, 3, width),
+               "stem_bn": bn_init(width)}
+    cin = width
+    p["stages"] = []
+    for mult in (2, 4, 8):
+        cout = width * mult
+        p["stages"].append({"down": conv_init(next(ks), 3, 3, cin, cout),
+                            "bn": bn_init(cout),
+                            "csp": _csp_init(ks, cout, cout)})
+        cin = cout
+    p["detect"] = conv_init(next(ks), 1, 1, cin,
+                            n_anchors * (5 + n_classes))
+    return p
+
+
+def yolov5s_apply(p, x):
+    """Returns detection map (B, H', W', anchors*(5+classes))."""
+    x = jax.nn.silu(bn(p["stem_bn"], conv(x, p["stem"], stride=2)))
+    for st in p["stages"]:
+        x = jax.nn.silu(bn(st["bn"], conv(x, st["down"], stride=2)))
+        x = _csp(st["csp"], x)
+    return conv(x, p["detect"])
+
+
+# ---------------------------------------------------------------- TinyBERT
+def tinybert_init(rng, vocab=30522, d=128, n_layers=4, n_heads=2,
+                  n_classes=35):
+    from repro.config.base import ModelConfig
+    from repro.models.transformer import init_params
+
+    cfg = ModelConfig(name="_tinybert", family="dense", n_layers=n_layers,
+                      d_model=d, n_heads=n_heads, n_kv_heads=n_heads,
+                      d_ff=4 * d, vocab_size=vocab, norm="layernorm",
+                      activation="gelu", rope="rope")
+    rng1, rng2 = jax.random.split(rng)
+    p = init_params(rng1, cfg)
+    p["cls"] = dense_init(rng2, d, n_classes, jnp.float32)
+    return p, cfg
+
+
+def tinybert_apply(params_cfg, tokens):
+    """Speech-command classification over a token sequence (B, T)."""
+    p, cfg = params_cfg
+    from repro.models.transformer import _embed_inputs, _trunk_full
+
+    x, positions, _ = _embed_inputs(p, {"tokens": tokens}, cfg)
+    ctx = {"positions": positions, "attn_impl": "naive", "chunk": 64,
+           "return_cache": False}
+    x, _, _ = _trunk_full(p, x, cfg, ctx, remat=False)
+    return jnp.mean(x, axis=1) @ p["cls"]
+
+
+EDGE_NETS = {
+    "res": (resnet18_init, resnet18_apply),
+    "mob": (mobilenetv3_init, mobilenetv3_apply),
+    "eff": (efficientnet_b0_init, efficientnet_b0_apply),
+    "inc": (inception_v3_init, inception_v3_apply),
+    "yolo": (yolov5s_init, yolov5s_apply),
+}

@@ -1,0 +1,87 @@
+"""Rotary position embedding variants.
+
+``rope``   — standard half-rotation RoPE (llama / starcoder2 / yi / qwen3).
+``rope2d`` — chatglm-style: RoPE applied to the first half of the head dim,
+             second half passes through (GLM's "2d" partial rotary).
+``mrope``  — qwen2-vl multimodal RoPE: head-dim split into 3 sections that
+             rotate with (temporal, height, width) position ids. Text tokens
+             use t=h=w=linear position, so mrope == rope for pure text.
+``none``   — no positional rotation (rwkv, rg-lru branches).
+
+Positions are passed explicitly so decode (position = cache length) and
+ring-buffer windowed caches work with the same code path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions (...,) -> angles (..., dim/2) in f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def _rotate(x: jax.Array, ang: jax.Array) -> jax.Array:
+    """x (..., dim) with angles (..., dim/2); pairs are (even, odd) halves."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, variant: str,
+               theta: float = 10_000.0,
+               mrope_positions: Optional[Tuple[jax.Array, ...]] = None
+               ) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) absolute token positions."""
+    if variant == "none":
+        return x
+    hd = x.shape[-1]
+    if variant == "rope":
+        ang = _angles(positions, hd, theta)[:, :, None, :]  # (B,S,1,hd/2)
+        return _rotate(x, ang)
+    if variant == "rope2d":
+        half = hd // 2
+        ang = _angles(positions, half, theta)[:, :, None, :]
+        rot = _rotate(x[..., :half], ang)
+        return jnp.concatenate([rot, x[..., half:]], -1)
+    if variant == "mrope":
+        # three sections of the rotary dims keyed by (t, h, w) position ids
+        if mrope_positions is None:
+            mrope_positions = (positions, positions, positions)
+        sec = hd // 2 // 4  # section unit; t gets 2 units, h and w one each
+        splits = (2 * sec, sec, (hd // 2) - 3 * sec)
+        angs = []
+        for pos, width in zip(mrope_positions, splits):
+            inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+            angs.append(pos.astype(jnp.float32)[..., None] * inv)
+        # interleave: first 2*sec freqs from t, next sec from h, rest from w
+        a_t, a_h, a_w = angs
+        ang = jnp.concatenate(
+            [a_t[..., : splits[0]],
+             a_h[..., splits[0]: splits[0] + splits[1]],
+             a_w[..., splits[0] + splits[1]:]], -1)[:, :, None, :]
+        return _rotate(x, ang)
+    raise ValueError(f"unknown rope variant {variant!r}")
+
+
+def default_positions(batch: int, seq: int, offset=0) -> jax.Array:
+    return jnp.arange(seq, dtype=jnp.int32)[None, :] + jnp.zeros(
+        (batch, 1), jnp.int32) + offset
+
+
+def vision_grid_positions(batch: int, n_tokens: int, grid_hw: int
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Synthetic (t, h, w) ids for stubbed vision patches laid on a grid."""
+    idx = jnp.arange(n_tokens, dtype=jnp.int32)
+    t = jnp.zeros_like(idx)
+    h = idx // grid_hw
+    w = idx % grid_hw
+    tile = lambda v: jnp.broadcast_to(v[None, :], (batch, n_tokens))  # noqa: E731
+    return tile(t), tile(h), tile(w)

@@ -1,0 +1,56 @@
+"""Sharding-constraint hooks usable from model code.
+
+``constrain(x, *spec)`` applies ``with_sharding_constraint`` when tracing
+under a mesh context and silently no-ops otherwise (CPU smoke tests, no
+mesh). Axis names absent from the active mesh are dropped from the spec.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _active_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+
+        m = thread_resources.env.physical_mesh
+        if m is None or m.empty:
+            return None
+        return m
+    except Exception:  # noqa: BLE001
+        return None
+
+
+def constrain(x, *spec):
+    import os
+
+    if os.environ.get("REPRO_NO_CONSTRAIN"):  # §Perf ablation switch
+        return x
+    m = _active_mesh()
+    if m is None:
+        return x
+    names = set(m.axis_names)
+
+    def clean(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in names)
+            return kept if kept else None
+        return entry if entry in names else None
+
+    cleaned = tuple(clean(e) for e in spec)
+    # drop axes that do not divide the dim
+    final = []
+    for dim, entry in zip(x.shape, cleaned):
+        if entry is None:
+            final.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= m.shape[a]
+        final.append(entry if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(m, P(*final)))

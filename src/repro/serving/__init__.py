@@ -1,0 +1,2 @@
+from repro.serving.simulator import EdgeServingEnv  # noqa: F401
+from repro.serving.platforms import PLATFORMS  # noqa: F401

@@ -1,0 +1,70 @@
+"""Request model (§III-A-1) and per-model queues with SLO-priority
+ordering (§IV-C: "the shorter the SLO, the higher the priority"; FIFO
+within equal priority)."""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import List, Optional
+
+_counter = itertools.count()
+
+
+@dataclasses.dataclass(order=False)
+class Request:
+    model: str            # m_t: DNN model type
+    input_type: str       # d_t: "image" | "text" | "speech"
+    input_shape: tuple    # d_s
+    slo_ms: float         # SLO_i
+    arrival_ms: float
+    seq: int = dataclasses.field(default_factory=lambda: next(_counter))
+    # filled at completion:
+    start_ms: Optional[float] = None
+    finish_ms: Optional[float] = None
+
+    @property
+    def deadline_ms(self) -> float:
+        return self.arrival_ms + self.slo_ms
+
+    def latency_ms(self) -> float:
+        assert self.finish_ms is not None
+        return self.finish_ms - self.arrival_ms
+
+    def violated(self) -> bool:
+        return self.latency_ms() > self.slo_ms
+
+
+class RequestQueue:
+    """SLO-priority queue: pops shortest-SLO first, FIFO among equals."""
+
+    def __init__(self, model: str, max_len: int = 4096):
+        self.model = model
+        self._heap: List[tuple] = []
+        self.max_len = max_len
+        self.dropped = 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, r: Request) -> bool:
+        if len(self._heap) >= self.max_len:
+            self.dropped += 1
+            return False
+        heapq.heappush(self._heap, (r.slo_ms, r.seq, r))
+        return True
+
+    def pop_batch(self, b: int) -> List[Request]:
+        out = []
+        while self._heap and len(out) < b:
+            out.append(heapq.heappop(self._heap)[2])
+        return out
+
+    def peek_oldest_age(self, now_ms: float) -> float:
+        if not self._heap:
+            return 0.0
+        return max(now_ms - r.arrival_ms for _, _, r in self._heap)
+
+    def slo_sum_ms(self, b: int) -> float:
+        slos = sorted(r.slo_ms for _, _, r in self._heap)[:b]
+        return float(sum(slos))

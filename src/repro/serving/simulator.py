@@ -1,0 +1,320 @@
+"""Discrete-event simulator of a multi-tenant edge serving platform.
+
+The container is CPU-only, so the Xavier-NX/Nano/TX2 hardware is simulated
+by the calibrated latency model (DESIGN.md §2). Semantics follow the paper:
+
+* requests arrive Poisson (§V-A), one SLO-priority queue per model (§IV-C);
+* a scheduling decision for a model picks (b, m_c); the dynamic batcher
+  then FORMS the round: it waits until b*m_c requests are queued or the
+  Eq.-1 scheduling slot t_i = Σ SLO / m_c elapses (adaptive batching's
+  time-window — this queue wait t_w is exactly why larger batches trade
+  latency for throughput, Fig. 1);
+* m_c instances execute concurrently (§IV-D) under the interference model;
+* the next decision for a model happens when its round completes;
+* reward = utility U (Eq. 3/6) of the round; memory overflow fails it.
+
+Because rounds of different models overlap in time, the env is a per-model
+semi-MDP: ``step(action)`` commits the focus model's round and advances the
+event loop to the NEXT decision point (any model). Completed transitions
+(s, a, r, s') are emitted in ``info["transitions"]`` when their model
+reaches its next decision, so the RL agents see properly-ordered
+per-model experience.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config.base import ServingConfig
+from repro.configs.paper_edge_models import EDGE_MODELS
+from repro.core.interference import interference_features
+from repro.core.utility import utility
+from repro.serving import latency_model as lm
+from repro.serving.features import featurize, state_dim
+from repro.serving.platforms import PLATFORMS, HardwareSpec
+from repro.serving.request import Request, RequestQueue
+from repro.serving.workload import PoissonWorkload
+
+IDLE, PENDING, ACTIVE = 0, 1, 2
+
+
+@dataclasses.dataclass
+class CompletedRound:
+    model: str
+    b: int
+    m_c: int
+    n_requests: int
+    decision_ms: float
+    start_ms: float
+    finish_ms: float
+    latencies_ms: List[float]
+    violations: int
+    overflow: bool
+    utility: float
+    mem_used_gb: float
+    features: object = None  # interference-predictor features at start
+
+    @property
+    def throughput_rps(self) -> float:
+        dur = max(self.finish_ms - self.decision_ms, 1e-3)
+        return 1000.0 * self.n_requests / dur
+
+
+@dataclasses.dataclass
+class _Pending:
+    model: str
+    b: int
+    m_c: int
+    target: int
+    decision_ms: float
+    deadline_ms: float
+    state: np.ndarray
+    action: int
+
+
+class EdgeServingEnv:
+    def __init__(self, cfg: ServingConfig = ServingConfig(),
+                 models: Optional[Sequence[str]] = None,
+                 episode_ms: float = 60_000.0, seed: int = 0):
+        self.cfg = cfg
+        self.hw: HardwareSpec = PLATFORMS[cfg.platform]
+        self.models = list(models or EDGE_MODELS.keys())
+        self.episode_ms = episode_ms
+        self.seed = seed
+        self.state_dim = state_dim(self.models)
+        self.n_actions = cfg.n_actions
+        self.history: List[CompletedRound] = []
+        self.reset()
+
+    # ------------------------------------------------------------ reset
+    def reset(self) -> np.ndarray:
+        self.now = 0.0
+        self.workload = PoissonWorkload(self.cfg.arrival_rps, self.models,
+                                        seed=self.seed)
+        self.queues: Dict[str, RequestQueue] = {
+            m: RequestQueue(m, self.cfg.max_queue) for m in self.models}
+        self._events: List[tuple] = []
+        self._evseq = 0
+        self.status: Dict[str, int] = {m: IDLE for m in self.models}
+        self.pending: Dict[str, _Pending] = {}
+        self.active: Dict[str, Tuple[int, float]] = {}  # model -> (inst, mem)
+        self._last_sa: Dict[str, Tuple[np.ndarray, int]] = {}
+        self._ready_reward: Dict[str, float] = {}
+        self._out_transitions: List[tuple] = []
+        self.history = []
+        self.total_requests = 0
+        self._focus = self.models[0]  # placeholder until first decision
+        r = self.workload.next_request()
+        self._push_event(r.arrival_ms, "arrival", r)
+        self._advance_to_decision()
+        return self._observe(self._focus)
+
+    def _push_event(self, t: float, kind: str, payload) -> None:
+        self._evseq += 1
+        heapq.heappush(self._events, (t, self._evseq, kind, payload))
+
+    # ------------------------------------------------------------ event loop
+    def _handle_arrival(self, r: Request) -> None:
+        self.queues[r.model].push(r)
+        self.total_requests += 1
+        nxt = self.workload.next_request()
+        self._push_event(nxt.arrival_ms, "arrival", nxt)
+        p = self.pending.get(r.model)
+        if p and len(self.queues[r.model]) >= p.target:
+            self._start_round(p)
+
+    def _handle_deadline(self, model: str) -> None:
+        p = self.pending.get(model)
+        if not p or self.now < p.deadline_ms - 1e-9:
+            return  # stale deadline (round already started)
+        if len(self.queues[model]) == 0:
+            # nothing arrived inside the slot: no-op round, zero reward
+            self.pending.pop(model)
+            self.status[model] = IDLE
+            self._ready_reward[model] = 0.0
+            return
+        self._start_round(p)
+
+    def _start_round(self, p: _Pending) -> None:
+        model = p.model
+        self.pending.pop(model, None)
+        prof = EDGE_MODELS[model]
+        q = self.queues[model]
+        # formation waits for ONE batch (b); at dispatch all m_c instances
+        # pull whatever is queued, up to b each (Triton instance semantics)
+        slo_sum_ms = q.slo_sum_ms(p.b * p.m_c) * self.cfg.slo_scale
+        reqs = q.pop_batch(p.b * p.m_c)
+        n = len(reqs)
+        b_eff = max(1, int(np.ceil(n / p.m_c)))
+        other_inst, other_mem = self._other_load(exclude=model)
+        est = lm.estimate_execution(self.hw, prof, b_eff, p.m_c,
+                                    other_inst, other_mem)
+        t_exec = est.total_ms
+        if est.overflow:
+            t_exec = 10.0 * max(slo_sum_ms / max(p.m_c, 1),
+                                self.hw.overhead_ms)
+        start = self.now
+        finish = start + t_exec
+        self.status[model] = ACTIVE
+        self.active[model] = (p.m_c, est.mem_used_gb - other_mem)
+
+        t_t = lm.transmission_ms(self.hw, prof)
+        t_s = lm.serialization_ms(b_eff)
+        lats, violations = [], 0
+        for r in reqs:
+            r.start_ms = start
+            r.finish_ms = finish + t_t + t_s
+            lat = r.latency_ms()
+            lats.append(lat)
+            if est.overflow or lat > r.slo_ms * self.cfg.slo_scale:
+                violations += 1
+
+        # utility (Eq. 3) with T_{t_i} = requests per scheduling slot
+        # (Eq. 1): U = log( (n/t_i) / (L/t_i) ) — the slot cancels, giving
+        # a clean requests-per-second-of-latency trade-off with an interior
+        # optimum in (b, m_c), as in Fig. 1.
+        slot_s = max(slo_sum_ms, 1.0) / 1000.0 / max(p.m_c, 1)
+        thr = n / slot_s
+        mean_lat_s = (float(np.mean(lats)) if lats else t_exec) / 1000.0
+        u = utility(max(thr, 1e-3), mean_lat_s,
+                    max(slo_sum_ms, 1.0) / 1000.0, p.m_c)
+        # Eq. 4 constraints as penalties: SLO misses and memory overflow
+        u -= 3.5 * (violations / max(n, 1))
+        if est.overflow:
+            u -= 5.0
+        feats = interference_features(
+            self.hw.mem_gb - other_mem, 0.3 + 0.05 * other_inst,
+            self._accel_util(), p.m_c, b_eff, prof.gflops,
+            est.mem_used_gb - other_mem)
+        rnd = CompletedRound(model, p.b, p.m_c, n, p.decision_ms, start,
+                             finish, lats, violations, est.overflow, u,
+                             est.mem_used_gb, feats)
+        self._push_event(finish, "complete", rnd)
+
+    def _handle_complete(self, rnd: CompletedRound) -> None:
+        self.active.pop(rnd.model, None)
+        self.status[rnd.model] = IDLE
+        self.history.append(rnd)
+        self._ready_reward[rnd.model] = rnd.utility
+
+    # ------------------------------------------------------------ decisions
+    def _decision_ready(self) -> List[str]:
+        return [m for m in self.models
+                if self.status[m] == IDLE and len(self.queues[m]) > 0]
+
+    def _advance_to_decision(self) -> bool:
+        """Process events until a decision point exists. Returns done."""
+        while True:
+            ready = self._decision_ready()
+            if ready:
+                self._focus = max(
+                    ready,
+                    key=lambda m: self.queues[m].peek_oldest_age(self.now))
+                return self.now >= self.episode_ms
+            if not self._events:
+                return True
+            t, _, kind, payload = heapq.heappop(self._events)
+            self.now = max(self.now, t)
+            if self.now >= self.episode_ms and kind == "arrival":
+                return True
+            if kind == "arrival":
+                self._handle_arrival(payload)
+            elif kind == "deadline":
+                self._handle_deadline(payload)
+            elif kind == "complete":
+                self._handle_complete(payload)
+
+    # ------------------------------------------------------------ resources
+    def _other_load(self, exclude: str) -> Tuple[int, float]:
+        inst = sum(i for m, (i, _) in self.active.items() if m != exclude)
+        mem = sum(g for m, (_, g) in self.active.items() if m != exclude)
+        return inst, mem
+
+    def _accel_util(self) -> float:
+        u = 0.0
+        for m, (inst, _) in self.active.items():
+            u += inst * lm.batching_efficiency(self.hw, 8)
+        return min(1.0, u)
+
+    def _observe(self, model: str) -> np.ndarray:
+        q = self.queues[model]
+        inst, mem = self._other_load(exclude="")
+        return featurize(model, self.models, self.hw, len(q),
+                         q.peek_oldest_age(self.now), mem, inst,
+                         self._accel_util())
+
+    def predict_features(self, model: str, b: int, m_c: int) -> np.ndarray:
+        prof = EDGE_MODELS[model]
+        inst, mem = self._other_load(exclude=model)
+        return interference_features(
+            self.hw.mem_gb - mem, 0.3 + 0.05 * inst, self._accel_util(),
+            m_c, b, prof.gflops, m_c * lm.instance_memory_gb(prof, b))
+
+    FORMATION_FRAC = 0.25  # batch-collection share of the Eq.-1 slot
+
+    def slot_budget_ms(self, model: str, b: int, m_c: int) -> float:
+        """Formation window: a quarter of the Eq.-1 slot t_i = Σ SLO / m_c
+        (execution + transmission must fit in the remainder, else every
+        formed batch would already be past its budget)."""
+        slot = b * m_c * EDGE_MODELS[model].slo_ms * self.cfg.slo_scale \
+            / max(m_c, 1)
+        return self.FORMATION_FRAC * slot
+
+    # ------------------------------------------------------------ step
+    def step(self, action: int) -> Tuple[np.ndarray, float, bool, Dict]:
+        model = self._focus
+        state = self._observe(model)
+        b, m_c = self.cfg.action_to_pair(action)
+        target = b  # formation waits for one instance-batch
+        budget = self.slot_budget_ms(model, b, m_c)
+        p = _Pending(model, b, m_c, target, self.now, self.now + budget,
+                     state, action)
+        self.status[model] = PENDING
+        self.pending[model] = p
+        self._last_sa[model] = (state, action)
+        if len(self.queues[model]) >= target:
+            self._start_round(p)
+        else:
+            self._push_event(p.deadline_ms, "deadline", model)
+
+        done = self._advance_to_decision()
+        obs = self._observe(self._focus) if not done else state
+
+        # emit per-model transitions whose reward is ready and whose model
+        # is at (or past) its next decision
+        transitions = []
+        for m, r in list(self._ready_reward.items()):
+            if m in self._last_sa and (self.status[m] == IDLE or done):
+                s0, a0 = self._last_sa.pop(m)
+                s1 = self._observe(m)
+                transitions.append((s0, a0, r, s1, done))
+                self._ready_reward.pop(m)
+        last_round = self.history[-1] if self.history else None
+        info = {"transitions": transitions, "model": model, "b": b,
+                "m_c": m_c, "round": last_round}
+        reward = transitions[-1][2] if transitions else 0.0
+        return obs, float(reward), done, info
+
+    # ------------------------------------------------------------ summary
+    def summarize(self) -> Dict[str, float]:
+        rounds = self.history
+        if not rounds:
+            return {}
+        n_req = sum(r.n_requests for r in rounds)
+        viol = sum(r.violations for r in rounds)
+        lats = [l for r in rounds for l in r.latencies_ms]
+        return {
+            "rounds": float(len(rounds)),
+            "requests": float(n_req),
+            "mean_utility": float(np.mean([r.utility for r in rounds])),
+            "throughput_rps": 1000.0 * n_req / max(self.now, 1.0),
+            "mean_latency_ms": float(np.mean(lats)) if lats else 0.0,
+            "p99_latency_ms": float(np.percentile(lats, 99)) if lats else 0.0,
+            "slo_violation_rate": viol / max(n_req, 1),
+            "overflow_rate": float(np.mean([r.overflow for r in rounds])),
+            "mean_batch": float(np.mean([r.n_requests for r in rounds])),
+            "mean_mc": float(np.mean([r.m_c for r in rounds])),
+        }

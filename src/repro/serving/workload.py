@@ -1,0 +1,46 @@
+"""Poisson request generator (§V-A: arrivals at 30 rps, Poisson, across the
+six Table-IV models)."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.paper_edge_models import EDGE_MODELS
+from repro.serving.request import Request
+
+
+class PoissonWorkload:
+    def __init__(self, rps: float = 30.0, models: Optional[Sequence[str]] = None,
+                 mix: Optional[Dict[str, float]] = None, seed: int = 0):
+        """``rps`` is the PER-MODEL arrival rate (paper §V-A: 30 rps per
+        served model); the aggregate rate is rps * len(models)."""
+        self.models = list(models or EDGE_MODELS.keys())
+        self.rps = rps * len(self.models)
+        if mix is None:
+            mix = {m: 1.0 for m in self.models}
+        total = sum(mix.values())
+        self.probs = np.array([mix[m] / total for m in self.models])
+        self.rng = np.random.default_rng(seed)
+        self.now_ms = 0.0
+
+    def next_request(self) -> Request:
+        gap_ms = self.rng.exponential(1000.0 / self.rps)
+        self.now_ms += gap_ms
+        name = self.rng.choice(self.models, p=self.probs)
+        prof = EDGE_MODELS[name]
+        return Request(model=name, input_type=prof.task,
+                       input_shape=prof.input_shape, slo_ms=prof.slo_ms,
+                       arrival_ms=self.now_ms)
+
+    def until(self, t_ms: float) -> Iterator[Request]:
+        while True:
+            r = self.next_request()
+            if r.arrival_ms > t_ms:
+                # rewind the clock so the pending gap is preserved
+                self.now_ms = t_ms
+                return
+            yield r
+
+    def burst(self, n: int) -> List[Request]:
+        return [self.next_request() for _ in range(n)]

@@ -1,0 +1,2 @@
+from repro.train.optimizer import adam, adamw, sgd, chain_clip  # noqa: F401
+from repro.train.train_state import TrainState  # noqa: F401

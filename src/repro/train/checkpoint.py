@@ -1,0 +1,72 @@
+"""npz-based pytree checkpointing with structure round-trip.
+
+Checkpoints are written atomically (tmp + rename). The pytree structure is
+recovered from the dotted leaf paths, so arbitrary nested dict/list/NamedTuple
+states restore as nested dicts with identical leaf ordering (the optimizer /
+model code treats params as dicts throughout, so this is lossless for us).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.common.tree import flatten_with_paths
+
+
+def save_checkpoint(path: str, tree: Any, metadata: Optional[Dict] = None) -> str:
+    flat = flatten_with_paths(tree)
+    arrays = {k: np.asarray(v) for k, v in flat}
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=np.frombuffer(
+                json.dumps(metadata or {}).encode(), dtype=np.uint8), **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def load_checkpoint(path: str) -> Dict[str, Any]:
+    """Returns a nested dict keyed by the original paths, plus '__meta__'."""
+    out: Dict[str, Any] = {}
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode()) if "__meta__" in z else {}
+        for key in z.files:
+            if key == "__meta__":
+                continue
+            _insert(out, key.split("/"), z[key])
+    out["__meta__"] = meta
+    return out
+
+
+def _insert(d: Dict, parts: List[str], value) -> None:
+    for p in parts[:-1]:
+        d = d.setdefault(p, {})
+    d[parts[-1]] = value
+
+
+def restore_like(template: Any, loaded: Dict[str, Any]) -> Any:
+    """Map loaded arrays back onto the structure of ``template``."""
+    import jax
+
+    flat = flatten_with_paths(template)
+    leaves = []
+    for key, leaf in flat:
+        node: Any = loaded
+        for part in key.split("/"):
+            node = node[part]
+        arr = np.asarray(node)
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

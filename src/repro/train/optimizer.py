@@ -1,0 +1,153 @@
+"""Minimal optax-like optimizer library in pure JAX.
+
+An optimizer is a pair of functions ``(init, update)``::
+
+    state = init(params)
+    updates, state = update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Implemented: SGD(+momentum), Adam, AdamW, global-norm clipping, and
+warmup-cosine / constant schedules. This is the full substrate used by both
+the LM trainer (train_4k shape) and the SAC scheduler networks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import global_norm
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------- schedules
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+def _as_schedule(lr) -> Schedule:
+    return lr if callable(lr) else constant(lr)
+
+
+# ---------------------------------------------------------------- SGD
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return SGDState(jnp.zeros((), jnp.int32), mom)
+
+    def update(grads, state, params=None):
+        lr_t = sched(state.step)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+            updates = jax.tree.map(lambda m: -lr_t * m, mom)
+        else:
+            mom = None
+            updates = jax.tree.map(lambda g: -lr_t * g, grads)
+        return updates, SGDState(state.step + 1, mom)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------- Adam(W)
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0,
+         mask: Optional[Callable[[str], bool]] = None) -> Optimizer:
+    """Adam; with ``weight_decay`` > 0 this is AdamW (decoupled decay).
+
+    ``mask(path)`` (if given) returns False for leaves that should not be
+    decayed (biases / norm scales).
+    """
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda: jax.tree.map(  # noqa: E731
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = sched(state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if weight_decay and params is not None:
+            if mask is not None:
+                from repro.common.tree import tree_map_with_path
+
+                decay_tree = tree_map_with_path(lambda k, p: mask(k), params)
+                updates = jax.tree.map(
+                    lambda m, v, p, d: upd(m, v, p if d else None),
+                    mu, nu, params, decay_tree)
+            else:
+                updates = jax.tree.map(upd, mu, nu, params)
+        else:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+# ---------------------------------------------------------------- clipping
+def chain_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Global-norm gradient clipping composed in front of ``opt``."""
+
+    def update(grads, state, params=None):
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(opt.init, update)

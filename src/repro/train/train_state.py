@@ -1,0 +1,24 @@
+"""TrainState bundling params + optimizer state, flax-free."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import Optimizer, apply_updates
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt_state: Any
+
+    @classmethod
+    def create(cls, params: Any, opt: Optimizer) -> "TrainState":
+        return cls(jnp.zeros((), jnp.int32), params, opt.init(params))
+
+    def apply_gradients(self, grads: Any, opt: Optimizer) -> "TrainState":
+        updates, opt_state = opt.update(grads, self.opt_state, self.params)
+        params = apply_updates(self.params, updates)
+        return TrainState(self.step + 1, params, opt_state)

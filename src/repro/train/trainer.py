@@ -1,0 +1,80 @@
+"""LM trainer: the end-to-end training driver (examples/train_small_lm.py
+trains a ~100M-param model for a few hundred steps with it)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import build_model
+from repro.train.checkpoint import save_checkpoint
+from repro.train.data import TokenPipeline
+from repro.train.optimizer import adam, apply_updates, chain_clip, \
+    warmup_cosine
+from repro.train.train_state import TrainState
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    batch: int = 8
+    seq_len: int = 256
+    steps: int = 300
+    lr: float = 3e-4
+    warmup: int = 50
+    clip_norm: float = 1.0
+    weight_decay: float = 0.01
+    log_every: int = 20
+    ckpt_path: Optional[str] = None
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig = TrainerConfig()):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.model = build_model(cfg, remat=False)
+        sched = warmup_cosine(tcfg.lr, tcfg.warmup, tcfg.steps)
+        self.opt = chain_clip(
+            adam(sched, weight_decay=tcfg.weight_decay,
+                 mask=lambda path: path.split("/")[-1] not in
+                 ("scale", "bias")), tcfg.clip_norm)
+        params = self.model.init(jax.random.PRNGKey(tcfg.seed))
+        self.state = TrainState.create(params, self.opt)
+        self._step = jax.jit(self._train_step)
+
+    def _train_step(self, state: TrainState, batch: Dict):
+        loss, grads = jax.value_and_grad(self.model.loss)(state.params,
+                                                          batch)
+        new_state = state.apply_gradients(grads, self.opt)
+        return new_state, loss
+
+    def data(self) -> TokenPipeline:
+        return TokenPipeline(self.cfg.vocab_size, self.tcfg.seq_len,
+                             self.tcfg.batch, seed=self.tcfg.seed)
+
+    def run(self, log: Callable[[str], None] = print) -> Dict[str, float]:
+        pipe = self.data()
+        losses = []
+        t0 = time.time()
+        it: Iterator = iter(pipe)
+        for step in range(self.tcfg.steps):
+            raw = next(it)
+            batch = {k: jnp.asarray(v) for k, v in raw.items()}
+            self.state, loss = self._step(self.state, batch)
+            losses.append(float(loss))
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps - 1:
+                tok_s = (self.tcfg.batch * self.tcfg.seq_len
+                         * (step + 1)) / (time.time() - t0)
+                log(f"step {step:4d} loss {losses[-1]:.4f} "
+                    f"({tok_s:,.0f} tok/s)")
+        pipe.close()
+        if self.tcfg.ckpt_path:
+            save_checkpoint(self.tcfg.ckpt_path, self.state.params,
+                            {"steps": self.tcfg.steps,
+                             "final_loss": losses[-1]})
+        return {"first_loss": losses[0], "final_loss": losses[-1],
+                "min_loss": min(losses)}

@@ -1,0 +1,64 @@
+"""Interference predictor tests (paper Fig. 13 behaviour)."""
+import numpy as np
+import pytest
+
+from repro.core.interference import (LinearInterferencePredictor,
+                                     NNInterferencePredictor,
+                                     interference_features)
+
+
+def _nonlinear_dataset(n=600, seed=0):
+    rng = np.random.default_rng(seed)
+    X = []
+    y = []
+    for _ in range(n):
+        mem_avail = rng.uniform(1, 8)
+        m_c = rng.integers(1, 9)
+        b = 2 ** rng.integers(0, 8)
+        gflops = rng.uniform(0.1, 3.5)
+        feats = interference_features(mem_avail, 0.3 + 0.05 * m_c, 0.5,
+                                      m_c, b, gflops, 0.1 * m_c * b / 8)
+        # nonlinear latency: saturation + knee (like the simulator)
+        eff = 0.5 * b / (b + 1.5)
+        util = min(1.0, m_c * eff)
+        lat = gflops * b * m_c / (0.5 * util)
+        pressure = (0.1 * m_c * b / 8) / mem_avail
+        if pressure > 0.5:
+            lat *= 1 + 4 * (pressure - 0.5) ** 2 * m_c
+        X.append(feats)
+        y.append(lat / 1000.0)
+    return np.stack(X), np.asarray(y)
+
+
+def test_nn_beats_linear_on_nonlinear_latency():
+    X, y = _nonlinear_dataset()
+    tr, va = slice(0, 480), slice(480, 600)
+    nn = NNInterferencePredictor(lr=3e-3)
+    nn.fit(X[tr], y[tr], epochs=3000)
+    lin = LinearInterferencePredictor()
+    lin.fit(X[tr], y[tr])
+
+    def p90(pred):
+        errs = [abs(pred.predict(x) - t) / abs(t)
+                for x, t in zip(X[va], y[va])]
+        return float(np.percentile(errs, 90))
+
+    assert p90(nn) < p90(lin) * 0.8  # paper: NN ~2x better
+
+
+def test_online_observe_path():
+    nn = NNInterferencePredictor(batch_size=16)
+    X, y = _nonlinear_dataset(64, seed=1)
+    for x, t in zip(X, y):
+        nn.observe(x, t)
+    # after online fitting, prediction should be within an order of
+    # magnitude on the training support
+    preds = np.array([nn.predict(x) for x in X])
+    assert np.all(np.isfinite(preds))
+    assert np.median(np.abs(np.log(preds) - np.log(y))) < 2.0
+
+
+def test_feature_vector_shape():
+    f = interference_features(4.0, 0.3, 0.5, 2, 8, 1.8, 0.2)
+    assert f.shape == (7,)
+    assert np.isfinite(f).all()

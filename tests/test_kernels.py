@@ -1,0 +1,115 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+R = np.random.default_rng(7)
+
+
+def rnd(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(R.standard_normal(shape) * scale, dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 64, 2, 2, 64), (2, 96, 4, 2, 64), (1, 128, 8, 1, 128),
+    (2, 80, 6, 3, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, H, KV, hd, dtype):
+    q, k, v = rnd(B, S, H, hd, dtype=dtype), rnd(B, S, KV, hd, dtype=dtype), \
+        rnd(B, S, KV, hd, dtype=dtype)
+    out = ops.flash_attention(q, k, v, scale=hd ** -0.5,
+                              block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, scale=hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype] * 10)
+
+
+@pytest.mark.parametrize("window", [8, 33, 64])
+def test_flash_attention_window(window):
+    B, S, H, KV, hd = 2, 96, 4, 2, 64
+    q, k, v = rnd(B, S, H, hd), rnd(B, S, KV, hd), rnd(B, S, KV, hd)
+    out = ops.flash_attention(q, k, v, scale=hd ** -0.5, window=window,
+                              block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, scale=hd ** -0.5, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5,
+                               rtol=2e-4)
+
+
+def test_flash_attention_noncausal_pad():
+    """Non-causal path must mask T-padding explicitly."""
+    B, S, H, KV, hd = 1, 40, 2, 2, 64  # S=40 pads to 64 with block 32
+    q, k, v = rnd(B, S, H, hd), rnd(B, S, KV, hd), rnd(B, S, KV, hd)
+    out = ops.flash_attention(q, k, v, scale=hd ** -0.5, causal=False,
+                              block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, scale=hd ** -0.5, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5,
+                               rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,C,H,KV,hd", [
+    (2, 80, 4, 2, 64), (1, 256, 8, 8, 128), (3, 100, 6, 2, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, C, H, KV, hd, dtype):
+    q = rnd(B, 1, H, hd, dtype=dtype)
+    k, v = rnd(B, C, KV, hd, dtype=dtype), rnd(B, C, KV, hd, dtype=dtype)
+    valid = jnp.asarray(R.random((B, C)) > 0.3)
+    valid = valid.at[:, 0].set(True)  # at least one valid slot
+    out = ops.decode_attention(q, k, v, valid, hd ** -0.5, block_c=32)
+    want = ref.decode_attention_ref(q, k, v, valid, hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype] * 10)
+
+
+@pytest.mark.parametrize("B,S,H,hd,chunk", [
+    (1, 32, 2, 64, 8), (2, 40, 4, 64, 16), (1, 64, 1, 128, 64),
+])
+def test_rwkv6_scan(B, S, H, hd, chunk):
+    r = rnd(B, S, H, hd)
+    k = rnd(B, S, H, hd, scale=0.3)
+    v = rnd(B, S, H, hd, scale=0.3)
+    w = jnp.asarray(R.random((B, S, H, hd)) * 0.5 + 0.4, jnp.float32)
+    u = rnd(H, hd, scale=0.1)
+    s0 = rnd(B, H, hd, hd, scale=0.1)
+    out, sT = ops.rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
+    want, wT = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(wT), atol=1e-4,
+                               rtol=1e-3)
+
+
+@pytest.mark.parametrize("B,S,W,chunk,bw", [
+    (2, 40, 96, 16, 32), (1, 33, 64, 8, 64), (2, 128, 256, 64, 128),
+])
+def test_rglru_scan(B, S, W, chunk, bw):
+    a = jnp.asarray(R.random((B, S, W)) * 0.5 + 0.4, jnp.float32)
+    x = rnd(B, S, W, scale=0.3)
+    h0 = rnd(B, W, scale=0.1)
+    hs, hT = ops.rglru_scan(a, x, h0, chunk=chunk, block_w=bw)
+    want, wT = ref.rglru_scan_ref(a, x, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(want), atol=1e-5,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(wT), atol=1e-5,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("E,C,D,F", [(2, 32, 64, 48), (4, 40, 48, 56),
+                                     (8, 16, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_matmul(E, C, D, F, dtype):
+    x = rnd(E, C, D, dtype=dtype)
+    w = rnd(E, D, F, dtype=dtype, scale=0.1)
+    out = ops.moe_matmul(x, w, block_c=16, block_f=32, block_d=16)
+    want = ref.moe_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype] * 10)

@@ -1,0 +1,105 @@
+"""Tests for the performance profiler (§IV-E) and scheduler deployment
+checkpointing (train-offline / deploy)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.config.base import ServingConfig
+from repro.core.baselines import FixedScheduler
+from repro.core.sac import SACAgent, SACConfig
+from repro.serving.bcedge import run_episode
+from repro.serving.profiler import PerformanceProfiler
+from repro.serving.simulator import EdgeServingEnv
+
+
+def _run_with_profiler(action, seed=0, ms=6000.0):
+    cfg = ServingConfig()
+    env = EdgeServingEnv(cfg, episode_ms=ms, seed=seed)
+    prof = PerformanceProfiler()
+    agent = FixedScheduler(action)
+    s = env.reset()
+    prof.reset_env()
+    done = False
+    while not done:
+        s, _, done, _ = env.step(agent.act(s))
+        prof.poll(env)
+    return cfg, env, prof
+
+
+def test_profiler_collects_rounds():
+    cfg, env, prof = _run_with_profiler(cfg_action(2, 2))
+    total = sum(e.total_requests for e in prof.table.values())
+    assert total == sum(r.n_requests for r in env.history)
+    # all records belong to the configured (b, m_c)
+    for (m, b, mc) in prof.table:
+        assert (b, mc) == (2, 2)
+
+
+def cfg_action(b, mc):
+    return ServingConfig().pair_to_action(b, mc)
+
+
+def test_profiler_summary_fields():
+    _, env, prof = _run_with_profiler(cfg_action(4, 1))
+    key = next(iter(prof.table))
+    s = prof.profile(*key)
+    assert s["rounds"] >= 1
+    assert s["mean_latency_ms"] > 0
+    assert 0 <= s["violation_rate"] <= 1
+    util = prof.utilization()
+    assert 0 <= util["busy_frac"] <= 1
+
+
+def test_profiler_best_config_prefers_feasible():
+    cfg = ServingConfig()
+    env = EdgeServingEnv(cfg, episode_ms=12_000.0, seed=3)
+    prof = PerformanceProfiler()
+    rng = np.random.default_rng(0)
+    s = env.reset()
+    done = False
+    # explore a few configs so the table has alternatives
+    actions = [cfg.pair_to_action(b, mc)
+               for b, mc in ((1, 1), (2, 2), (64, 8))]
+    while not done:
+        s, _, done, _ = env.step(actions[int(rng.integers(len(actions)))])
+        prof.poll(env)
+    best = prof.best_config("yolo", max_violation=0.6)
+    if best is not None:  # enough data collected
+        assert best != (64, 8)  # the pathological config never wins
+
+
+def test_fig1_surface_shape():
+    _, env, prof = _run_with_profiler(cfg_action(2, 1))
+    surf = prof.fig1_surface("res")
+    if surf:
+        assert all(len(k) == 2 for k in surf)
+
+
+# ---------------------------------------------------------------- deploy
+def test_sac_save_load_roundtrip(tmp_path):
+    agent = SACAgent(10, 16, SACConfig(batch_size=8), seed=0)
+    # a few updates so weights move off init
+    rng = np.random.default_rng(0)
+    for _ in range(32):
+        s = rng.standard_normal(10).astype(np.float32)
+        agent.observe(s, int(rng.integers(16)), float(rng.random()),
+                      rng.standard_normal(10).astype(np.float32), False)
+    agent.update()
+    path = os.path.join(tmp_path, "sac.npz")
+    agent.save(path)
+
+    fresh = SACAgent(10, 16, SACConfig(batch_size=8), seed=99)
+    probe = np.ones(10, np.float32)
+    before = fresh.act(probe, greedy=True)
+    fresh.load(path)
+    assert fresh.act(probe, greedy=True) == agent.act(probe, greedy=True)
+
+
+def test_sac_load_rejects_mismatched_actions(tmp_path):
+    agent = SACAgent(10, 16, seed=0)
+    path = os.path.join(tmp_path, "sac.npz")
+    agent.save(path)
+    other = SACAgent(10, 8, seed=0)
+    with pytest.raises(ValueError):
+        other.load(path)

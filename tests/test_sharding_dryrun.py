@@ -1,0 +1,138 @@
+"""Sharding-rule + small-mesh lowering tests.
+
+These run in a SUBPROCESS with a small forced device count (the main test
+process must keep the default single device for the smoke tests)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_sub(code: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def test_param_pspec_rules_unit():
+    """Pure-python rule checks (no devices needed)."""
+    sys.path.insert(0, SRC)
+    import numpy as np
+
+    from repro.launch.sharding import _base_spec, param_pspec
+
+    class Leaf:
+        def __init__(self, shape):
+            self.shape = shape
+            self.ndim = len(shape)
+
+    assert _base_spec("embed", 2) == ("model", None)
+    assert _base_spec("units/0/attn/wq", 2) == (None, "model")
+    assert _base_spec("units/0/attn/wo", 2) == ("model", None)
+    assert _base_spec("units/0/ffn/w_up", 3) == ("model", None, None)
+    assert _base_spec("tail/0/ffn/w_up", 2) == (None, "model")
+    assert _base_spec("units/0/time_mix/W_v", 2) == (None, "model")
+    assert _base_spec("units/0/channel_mix/W_v", 2) == ("model", None)
+    # stacked leaf gets a leading None
+    spec = param_pspec("units/0/attn/wq", Leaf((8, 256, 256)))
+    assert spec == (None, None, "model") or tuple(spec) == (
+        None, None, "model")
+    # 2d mode upgrades a divisible None dim to data
+    spec = param_pspec("units/0/attn/wq", Leaf((8, 256, 256)), mode="2d",
+                       data_size=16)
+    assert tuple(spec) == (None, "data", "model")
+    # non-divisible dims are not upgraded
+    spec = param_pspec("tail/0/rec/conv_w", Leaf((4, 256)), mode="2d",
+                       data_size=16)
+    assert tuple(spec)[0] is None
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen3-0.6b", "decode_32k"),
+    ("recurrentgemma-2b", "long_500k"),
+])
+def test_small_mesh_lowering(arch, shape):
+    """Reduced configs must lower+compile on a 2x2 debug mesh."""
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from repro.config import get_reduced_config, INPUT_SHAPES
+from repro.launch import sharding
+from repro.launch.mesh import make_debug_mesh
+from repro.models import build_model
+import dataclasses
+
+cfg = get_reduced_config("{arch}")
+mesh = make_debug_mesh(2, 2)
+model = build_model(cfg, remat=False)
+params_abs = model.abstract_params(jnp.float32)
+p_shard = sharding.param_shardings(mesh, params_abs)
+shape = dataclasses.replace(INPUT_SHAPES["{shape}"], seq_len=128,
+                            global_batch=4)
+cache_abs = model.cache_spec(4, 128, jnp.float32)
+c_shard = sharding.cache_shardings(mesh, cfg, cache_abs, 4)
+inputs = model.input_specs(shape, jnp.float32)
+in_shard = sharding.input_shardings(mesh, cfg, inputs)
+with mesh:
+    compiled = jax.jit(model.decode_step,
+                       in_shardings=(p_shard, c_shard, in_shard)
+                       ).lower(params_abs, cache_abs, inputs).compile()
+print("OK", compiled.memory_analysis().temp_size_in_bytes >= 0)
+"""
+    out = _run_sub(code)
+    assert "OK" in out
+
+
+def test_dryrun_roofline_artifacts_valid():
+    """Every saved dry-run artifact must be schema-complete."""
+    base = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "dryrun")
+    if not os.path.isdir(base):
+        pytest.skip("no dry-run artifacts yet")
+    files = [f for f in os.listdir(base) if f.endswith(".json")]
+    assert files, "dry-run directory is empty"
+    n_ok = 0
+    for f in files:
+        with open(os.path.join(base, f)) as fh:
+            r = json.load(fh)
+        assert r["status"] in ("ok", "skipped"), f"{f}: {r.get('error')}"
+        if r["status"] == "ok":
+            n_ok += 1
+            assert r["bytes_per_device"] > 0
+            for key in ("compute_s", "memory_s", "collective_s"):
+                assert r["roofline"][key] >= 0
+            assert r["dominant"].endswith("_s")
+    assert n_ok >= 30
+
+
+def test_collective_parser_trip_counts():
+    sys.path.insert(0, SRC)
+    from repro.launch.roofline import parse_collectives
+
+    hlo = """
+body_1 (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[8]{0} all-reduce(f32[8]{0} %x), replica_groups={}
+}
+
+cond_1 (p: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+
+ENTRY main () -> f32[8] {
+  %w = (s32[], f32[8]) while((s32[], f32[8]) %init), condition=%cond_1, body=%body_1
+  %ag = f32[16]{0} all-gather(f32[8]{0} %y), dimensions={0}
+}
+"""
+    out = parse_collectives(hlo)
+    assert out["all-reduce_bytes"] == 8 * 4 * 10  # x10 trip count
+    assert out["all-gather_bytes"] == 16 * 4

@@ -1,0 +1,148 @@
+"""Simulator invariants — unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config.base import ServingConfig
+from repro.configs.paper_edge_models import EDGE_MODELS
+from repro.serving import latency_model as lm
+from repro.serving.platforms import PLATFORMS
+from repro.serving.request import Request, RequestQueue
+from repro.serving.simulator import EdgeServingEnv
+from repro.serving.workload import PoissonWorkload
+
+
+# ------------------------------------------------------------ queues
+def test_queue_slo_priority_order():
+    q = RequestQueue("m")
+    for slo in (100.0, 20.0, 50.0, 20.0):
+        q.push(Request("m", "image", (3,), slo, arrival_ms=0.0))
+    batch = q.pop_batch(4)
+    assert [r.slo_ms for r in batch] == [20.0, 20.0, 50.0, 100.0]
+
+
+def test_queue_fifo_within_priority():
+    q = RequestQueue("m")
+    rs = [Request("m", "image", (3,), 50.0, arrival_ms=float(i))
+          for i in range(5)]
+    for r in rs:
+        q.push(r)
+    assert [r.arrival_ms for r in q.pop_batch(5)] == [0, 1, 2, 3, 4]
+
+
+def test_queue_drop_at_capacity():
+    q = RequestQueue("m", max_len=2)
+    ok = [q.push(Request("m", "i", (1,), 10.0, 0.0)) for _ in range(4)]
+    assert ok == [True, True, False, False]
+    assert q.dropped == 2
+
+
+# ------------------------------------------------------------ workload
+def test_poisson_rate():
+    wl = PoissonWorkload(rps=30.0, seed=0)
+    reqs = wl.burst(8000)
+    dur_s = (reqs[-1].arrival_ms - reqs[0].arrival_ms) / 1000.0
+    rate = len(reqs) / dur_s
+    assert rate == pytest.approx(30.0 * len(EDGE_MODELS), rel=0.1)
+
+
+def test_poisson_mix_uniform():
+    wl = PoissonWorkload(rps=30.0, seed=1)
+    reqs = wl.burst(6000)
+    counts = {m: 0 for m in EDGE_MODELS}
+    for r in reqs:
+        counts[r.model] += 1
+    for c in counts.values():
+        assert c == pytest.approx(1000, rel=0.25)
+
+
+# ------------------------------------------------------------ latency model
+@given(b=st.integers(1, 128), mc=st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_latency_positive_and_memory_monotonic(b, mc):
+    hw = PLATFORMS["xavier_nx"]
+    prof = EDGE_MODELS["yolo"]
+    est = lm.estimate_execution(hw, prof, b, mc)
+    assert est.compute_ms > 0
+    assert est.interference_factor >= 1.0
+    est2 = lm.estimate_execution(hw, prof, b, mc + 1)
+    assert est2.mem_used_gb > est.mem_used_gb
+
+
+@given(b=st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_batching_amortizes_per_request_compute(b):
+    hw = PLATFORMS["xavier_nx"]
+    prof = EDGE_MODELS["res"]
+    t1 = lm.estimate_execution(hw, prof, b, 1).compute_ms / b
+    t2 = lm.estimate_execution(hw, prof, b * 2, 1).compute_ms / (b * 2)
+    assert t2 <= t1 + 1e-6
+
+
+def test_overflow_at_huge_batch():
+    hw = PLATFORMS["jetson_nano"]
+    prof = EDGE_MODELS["inc"]
+    est = lm.estimate_execution(hw, prof, 128, 8)
+    assert est.overflow
+
+
+# ------------------------------------------------------------ env invariants
+@given(seed=st.integers(0, 50), action=st.integers(0, 63))
+@settings(max_examples=20, deadline=None)
+def test_env_conserves_requests(seed, action):
+    cfg = ServingConfig()
+    env = EdgeServingEnv(cfg, episode_ms=3000.0, seed=seed)
+    done, steps = False, 0
+    while not done and steps < 200:
+        _, _, done, _ = env.step(action)
+        steps += 1
+    served = sum(r.n_requests for r in env.history)
+    queued = sum(len(q) for q in env.queues.values())
+    pending_exec = 0  # rounds in flight hold popped requests
+    for t, _, kind, payload in env._events:
+        if kind == "complete":
+            pending_exec += payload.n_requests
+    dropped = sum(q.dropped for q in env.queues.values())
+    assert served + queued + pending_exec + dropped == env.total_requests
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=10, deadline=None)
+def test_env_latencies_nonnegative_and_time_monotone(seed):
+    cfg = ServingConfig()
+    env = EdgeServingEnv(cfg, episode_ms=3000.0, seed=seed)
+    rng = np.random.default_rng(seed)
+    done, last_now = False, 0.0
+    while not done:
+        assert env.now >= last_now
+        last_now = env.now
+        _, _, done, _ = env.step(int(rng.integers(cfg.n_actions)))
+    for rnd in env.history:
+        assert rnd.finish_ms >= rnd.start_ms >= rnd.decision_ms
+        for lat in rnd.latencies_ms:
+            assert lat > 0
+
+
+def test_env_violation_accounting():
+    cfg = ServingConfig()
+    env = EdgeServingEnv(cfg, episode_ms=5000.0, seed=3)
+    done = False
+    while not done:
+        _, _, done, _ = env.step(cfg.pair_to_action(128, 8))  # absurd batch
+    s = env.summarize()
+    assert s["slo_violation_rate"] > 0.3  # extreme config must violate
+
+
+def test_transitions_are_per_model_consistent():
+    cfg = ServingConfig()
+    env = EdgeServingEnv(cfg, episode_ms=4000.0, seed=0)
+    done = False
+    count = 0
+    while not done:
+        _, _, done, info = env.step(5)
+        for (s, a, r, s2, d) in info["transitions"]:
+            assert s.shape == s2.shape == (env.state_dim,)
+            assert 0 <= a < env.n_actions
+            assert np.isfinite(r)
+            count += 1
+    assert count > 10

@@ -1,0 +1,134 @@
+"""Substrate tests: optimizer, checkpointing, data pipeline, trainer."""
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.tree import global_norm
+from repro.train.checkpoint import load_checkpoint, restore_like, \
+    save_checkpoint
+from repro.train.data import TokenPipeline
+from repro.train.optimizer import (adam, apply_updates, chain_clip, sgd,
+                                   warmup_cosine)
+
+
+# ---------------------------------------------------------------- optimizer
+def _quadratic(params):
+    return jnp.sum(jnp.square(params["w"] - 3.0)) + \
+        jnp.sum(jnp.square(params["b"] + 1.0))
+
+
+@pytest.mark.parametrize("opt_fn", [
+    lambda: sgd(0.1), lambda: sgd(0.05, momentum=0.9), lambda: adam(0.1),
+    lambda: adam(0.1, weight_decay=1e-4),
+])
+def test_optimizers_minimize_quadratic(opt_fn):
+    opt = opt_fn()
+    params = {"w": jnp.zeros(4), "b": jnp.zeros(3)}
+    state = opt.init(params)
+    for _ in range(300):
+        grads = jax.grad(_quadratic)(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(_quadratic(params)) < 1e-2
+
+
+def test_clipping_bounds_update_norm():
+    opt = chain_clip(sgd(1.0), max_norm=0.5)
+    params = {"w": jnp.zeros(8)}
+    state = opt.init(params)
+    grads = {"w": jnp.full(8, 100.0)}
+    updates, _ = opt.update(grads, state, params)
+    assert float(global_norm(updates)) <= 0.5 + 1e-5
+
+
+def test_warmup_cosine_schedule_shape():
+    sched = warmup_cosine(1.0, warmup=10, total=100)
+    v0 = float(sched(jnp.asarray(0)))
+    v10 = float(sched(jnp.asarray(10)))
+    v100 = float(sched(jnp.asarray(100)))
+    assert v0 < 0.2
+    assert v10 == pytest.approx(1.0, abs=0.1)
+    assert v100 < v10
+
+
+@given(lr=st.floats(1e-4, 1e-1), steps=st.integers(1, 20))
+@settings(max_examples=20, deadline=None)
+def test_adam_update_is_finite(lr, steps):
+    opt = adam(lr)
+    params = {"w": jnp.ones(4)}
+    state = opt.init(params)
+    for _ in range(steps):
+        updates, state = opt.update({"w": jnp.ones(4)}, state, params)
+        params = apply_updates(params, updates)
+    assert bool(jnp.isfinite(params["w"]).all())
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"b": np.arange(6, dtype=np.float32).reshape(2, 3)},
+            "c": [np.ones(2, np.int32), np.zeros(3, np.float32)]}
+    path = os.path.join(tmp_path, "ck.npz")
+    save_checkpoint(path, tree, {"step": 7})
+    loaded = load_checkpoint(path)
+    assert loaded["__meta__"]["step"] == 7
+    restored = restore_like(tree, loaded)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "ck.npz")
+    save_checkpoint(path, {"w": np.ones((2, 2))})
+    with pytest.raises(ValueError):
+        restore_like({"w": np.ones((3, 2))}, load_checkpoint(path))
+
+
+# ---------------------------------------------------------------- data
+def test_pipeline_deterministic():
+    a = TokenPipeline(512, 32, 4, seed=3).sample_batch()
+    b = TokenPipeline(512, 32, 4, seed=3).sample_batch()
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    batch = TokenPipeline(512, 32, 4, seed=0).sample_batch()
+    np.testing.assert_array_equal(batch["tokens"][:, 1:],
+                                  batch["labels"][:, :-1])
+
+
+def test_pipeline_has_learnable_structure():
+    """Markov stream must be compressible below the uniform entropy."""
+    pipe = TokenPipeline(256, 64, 8, seed=1, order=1)
+    batch = pipe.sample_batch()
+    toks = batch["tokens"]
+    # empirical conditional entropy proxy: repeated contexts predict well
+    from collections import Counter, defaultdict
+
+    ctx_next = defaultdict(Counter)
+    for row in toks:
+        for t in range(1, len(row)):
+            ctx_next[(row[t - 1],)][row[t]] += 1
+    repeated = [c for c in ctx_next.values() if sum(c.values()) >= 3]
+    if repeated:
+        agreement = np.mean([c.most_common(1)[0][1] / sum(c.values())
+                             for c in repeated])
+        assert agreement > 0.4  # uniform would be ~1/256
+
+
+# ---------------------------------------------------------------- trainer
+def test_trainer_reduces_loss():
+    from repro.config.base import ModelConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=128,
+                      n_heads=2, n_kv_heads=2, d_ff=256, vocab_size=256)
+    tr = Trainer(cfg, TrainerConfig(batch=8, seq_len=64, steps=120,
+                                    lr=3e-3, log_every=1000))
+    stats = tr.run(log=lambda *_: None)
+    assert stats["final_loss"] < stats["first_loss"] - 0.5
+    assert stats["final_loss"] < math.log(256)
