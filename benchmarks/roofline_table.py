@@ -1,4 +1,4 @@
-"""EXPERIMENTS.md §Roofline: render the per-(arch x shape x mesh) table
+"""docs/EXPERIMENTS.md §Roofline: render the per-(arch x shape x mesh) table
 from the dry-run JSON artifacts in experiments/dryrun*/."""
 from __future__ import annotations
 

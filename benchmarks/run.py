@@ -24,6 +24,7 @@ MODULES = [
     "fig13_interference",
     "fig14_15_slo",
     "fig16_overhead",
+    "fig_continuous_vs_round",
     "roofline_table",
 ]
 

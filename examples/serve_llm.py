@@ -2,85 +2,23 @@
 inference (reduced qwen3 running under jit on this host), wall-clock
 latencies and all.
 
-Requests with token prompts arrive Poisson; the SAC scheduler picks the
-batch size per round; the engine executes prefill+decode; utilities are
-computed from measured latencies.
+Thin wrapper around the importable entry point
+``repro.launch.engine_serve`` (also reachable as
+``python -m repro.launch.serve --engine [--exec-mode continuous]``).
 
-Run:  PYTHONPATH=src python examples/serve_llm.py
+Run:  PYTHONPATH=src python examples/serve_llm.py [round|continuous]
 """
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np  # noqa: E402
-
-from repro.config import get_reduced_config  # noqa: E402
-from repro.config.base import ServingConfig  # noqa: E402
-from repro.core.sac import SACAgent, SACConfig  # noqa: E402
-from repro.core.utility import utility  # noqa: E402
-from repro.serving.engine import InferenceEngine  # noqa: E402
+from repro.launch import engine_serve  # noqa: E402
 
 
-def main(duration_s: float = 20.0, rps: float = 12.0, slo_ms: float = 1500.0):
-    cfg = get_reduced_config("qwen3-0.6b")
-    print(f"loading reduced {cfg.name} "
-          f"(d={cfg.d_model}, L={cfg.n_layers})...")
-    engine = InferenceEngine(cfg, max_seq=128)
-    # warm the compile cache
-    engine.generate([np.arange(8, dtype=np.int32)], max_new_tokens=2)
-
-    scfg = ServingConfig(batch_sizes=(1, 2, 4, 8),
-                         concurrency_levels=(1,))
-    agent = SACAgent(4, scfg.n_actions,
-                     SACConfig(batch_size=32, lr=1e-3), seed=0)
-    rng = np.random.default_rng(0)
-
-    queue = []
-    t0 = time.perf_counter()
-    next_arrival = rng.exponential(1.0 / rps)
-    served = violations = rounds = 0
-    lat_sum = 0.0
-    state = np.zeros(4, np.float32)
-    while time.perf_counter() - t0 < duration_s:
-        now = time.perf_counter() - t0
-        while next_arrival <= now:
-            queue.append((next_arrival,
-                          rng.integers(1, cfg.vocab_size,
-                                       rng.integers(4, 24)).astype(np.int32)))
-            next_arrival += rng.exponential(1.0 / rps)
-        if not queue:
-            time.sleep(0.002)
-            continue
-        oldest_age = now - queue[0][0]
-        state = np.array([np.log1p(len(queue)), oldest_age,
-                          np.log1p(served), 1.0], np.float32)
-        a = agent.act(state)
-        b, _ = scfg.action_to_pair(a)
-        batch = queue[:b]
-        queue = queue[b:]
-        res = engine.generate([p for _, p in batch], max_new_tokens=4)
-        done_t = time.perf_counter() - t0
-        lats = [(done_t - arr) * 1000.0 for arr, _ in batch]
-        viol = sum(1 for l in lats if l > slo_ms)
-        served += len(batch)
-        violations += viol
-        lat_sum += sum(lats)
-        rounds += 1
-        u = utility(len(batch) / max(res.total_ms / 1000, 1e-3),
-                    np.mean(lats) / 1000.0,
-                    slo_ms / 1000.0 * len(batch), 1) - 2.0 * viol / len(batch)
-        s2 = np.array([np.log1p(len(queue)), 0.0, np.log1p(served), 1.0],
-                      np.float32)
-        agent.observe(state, a, u, s2, False)
-        agent.update()
-    dur = time.perf_counter() - t0
-    print(f"served {served} requests in {dur:.1f}s "
-          f"({served/dur:.1f} rps) over {rounds} rounds")
-    print(f"mean latency {lat_sum/max(served,1):.0f}ms, "
-          f"violations {violations/max(served,1):.1%} (SLO {slo_ms:.0f}ms)")
+def main(exec_mode: str = "round"):
+    engine_serve.main(exec_mode=exec_mode)
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1] if len(sys.argv) > 1 else "round")

@@ -156,7 +156,22 @@ INPUT_SHAPES = {
 
 @dataclasses.dataclass(frozen=True)
 class ServingConfig:
-    """BCEdge scheduler + serving layer parameters (paper §IV/§V-A)."""
+    """BCEdge scheduler + serving layer parameters (paper §IV/§V-A).
+
+    ``exec_mode`` selects the execution substrate the scheduler drives
+    (docs/ARCHITECTURE.md §5):
+
+    * ``"round"`` — the paper's semantics: a (b, m_c) round runs to
+      completion, every request in the batch waits for the slowest one.
+    * ``"continuous"`` — iteration-level batching: the action is
+      reinterpreted as (max slots per instance, concurrency); requests
+      join/leave the running batch at decode-iteration boundaries.
+
+    ``decode_steps_mean`` parameterises how autoregressive the workload
+    is: each request needs a geometrically-distributed number of decode
+    iterations with this mean (1.0 = the paper's single-shot CNN/BERT
+    requests, where both modes coincide round-for-round).
+    """
 
     batch_sizes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128)
     concurrency_levels: Tuple[int, ...] = (1, 2, 3, 4, 5, 6, 7, 8)
@@ -166,6 +181,12 @@ class ServingConfig:
     max_queue: int = 512
     seed: int = 0
     use_interference_predictor: bool = True
+    exec_mode: str = "round"  # "round" | "continuous"
+    decode_steps_mean: float = 1.0  # mean decode iterations per request
+
+    def __post_init__(self):
+        assert self.exec_mode in ("round", "continuous"), self.exec_mode
+        assert self.decode_steps_mean >= 1.0, self.decode_steps_mean
 
     @property
     def n_actions(self) -> int:

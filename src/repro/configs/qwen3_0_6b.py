@@ -2,7 +2,8 @@
 GQA(kv=8), head_dim 128 decoupled from d_model, tied embeddings.
 
 A beyond-paper sliding-window variant ("qwen3-0.6b-swa", w=8192) is also
-registered so a small dense arch covers long_500k (see DESIGN.md §8)."""
+registered so a small dense arch covers long_500k (see
+docs/ARCHITECTURE.md §8)."""
 import dataclasses
 
 from repro.config.base import ModelConfig

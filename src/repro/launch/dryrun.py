@@ -45,7 +45,7 @@ def build_case(arch: str, shape_name: str, mesh, sharding_mode: str = "tp"):
                         compute_dtype=(jnp.bfloat16
                                        if shape.kind == "train" else None))
     if shape.name == "long_500k" and not model.supports_shape(shape):
-        return None  # documented skip (DESIGN.md §4)
+        return None  # documented skip (docs/ARCHITECTURE.md §4)
 
     params_abs = model.abstract_params(dtype)
     p_mode = "2d" if sharding_mode in ("2d", "decode2d") else "tp"
@@ -131,7 +131,7 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
         # batch + 2D weights + both-axes cache ("decode2d"); everything
         # else keeps batch-on-data TP — for models that FIT at TP-16,
         # sharded-batch TP psums (B/16,1,d) beat decode2d's full-batch
-        # psums by 16x (see EXPERIMENTS.md §Perf iteration log).
+        # psums by 16x (see docs/EXPERIMENTS.md §Perf iteration log).
         cfg_probe = get_config(arch)
         w_gib_tp = cfg_probe.param_count_estimate() * 2 / 16 / 2 ** 30
         sharding_mode = ("decode2d"
@@ -143,7 +143,8 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
                     "sharding": sharding_mode}
     if case is None:
         result["status"] = "skipped"
-        result["reason"] = "full-attention arch at 512k decode (DESIGN.md §4)"
+        result["reason"] = ("full-attention arch at 512k decode "
+                            "(docs/ARCHITECTURE.md §4)")
         _emit(result, out_dir, verbose)
         return result
     fn, args, shards, donate = case

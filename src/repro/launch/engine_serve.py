@@ -1,0 +1,149 @@
+"""Real-engine serving driver (importable entry point for
+``python -m repro.launch.serve --engine``; docs/ARCHITECTURE.md §6).
+
+The BCEdge scheduler batching REAL model inference — a reduced
+architecture running under jit on this host, wall-clock latencies and
+all. Requests with token prompts arrive Poisson; utilities are computed
+from measured latencies (Eq. 3).
+
+Two execution modes, mirroring the simulator's ``exec_mode``:
+
+* ``round`` — the SAC scheduler picks the batch size per round and the
+  ``InferenceEngine`` runs each round to completion (paper §IV-D);
+* ``continuous`` — the ``ContinuousBatchingEngine`` decodes a fixed set
+  of KV slots one iteration at a time; arrivals are submitted as they
+  land and join at iteration boundaries (docs/ARCHITECTURE.md §5).
+
+Run:  PYTHONPATH=src python -m repro.launch.serve --engine
+      PYTHONPATH=src python -m repro.launch.serve --engine \
+          --exec-mode continuous
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.config import get_reduced_config
+from repro.config.base import ServingConfig
+from repro.core.sac import SACAgent, SACConfig
+from repro.core.utility import utility
+from repro.serving.engine import ContinuousBatchingEngine, InferenceEngine
+
+
+def _report(served: int, violations: int, rounds: int, lat_sum: float,
+            dur: float, slo_ms: float, label: str) -> None:
+    print(f"[{label}] served {served} requests in {dur:.1f}s "
+          f"({served/max(dur,1e-6):.1f} rps) over {rounds} rounds/iters")
+    print(f"[{label}] mean latency {lat_sum/max(served,1):.0f}ms, "
+          f"violations {violations/max(served,1):.1%} (SLO {slo_ms:.0f}ms)")
+
+
+def serve_round(arch: str = "qwen3-0.6b", duration_s: float = 20.0,
+                rps: float = 12.0, slo_ms: float = 1500.0) -> None:
+    """Round mode: SAC picks b per round, engine runs it to completion."""
+    cfg = get_reduced_config(arch)
+    print(f"loading reduced {cfg.name} "
+          f"(d={cfg.d_model}, L={cfg.n_layers})...")
+    engine = InferenceEngine(cfg, max_seq=128)
+    # warm the compile cache
+    engine.generate([np.arange(8, dtype=np.int32)], max_new_tokens=2)
+
+    scfg = ServingConfig(batch_sizes=(1, 2, 4, 8),
+                         concurrency_levels=(1,))
+    agent = SACAgent(4, scfg.n_actions,
+                     SACConfig(batch_size=32, lr=1e-3), seed=0)
+    rng = np.random.default_rng(0)
+
+    queue = []
+    t0 = time.perf_counter()
+    next_arrival = rng.exponential(1.0 / rps)
+    served = violations = rounds = 0
+    lat_sum = 0.0
+    state = np.zeros(4, np.float32)
+    while time.perf_counter() - t0 < duration_s:
+        now = time.perf_counter() - t0
+        while next_arrival <= now:
+            queue.append((next_arrival,
+                          rng.integers(1, cfg.vocab_size,
+                                       rng.integers(4, 24)).astype(np.int32)))
+            next_arrival += rng.exponential(1.0 / rps)
+        if not queue:
+            time.sleep(0.002)
+            continue
+        oldest_age = now - queue[0][0]
+        state = np.array([np.log1p(len(queue)), oldest_age,
+                          np.log1p(served), 1.0], np.float32)
+        a = agent.act(state)
+        b, _ = scfg.action_to_pair(a)
+        batch = queue[:b]
+        queue = queue[b:]
+        res = engine.generate([p for _, p in batch], max_new_tokens=4)
+        done_t = time.perf_counter() - t0
+        lats = [(done_t - arr) * 1000.0 for arr, _ in batch]
+        viol = sum(1 for l in lats if l > slo_ms)
+        served += len(batch)
+        violations += viol
+        lat_sum += sum(lats)
+        rounds += 1
+        u = utility(len(batch) / max(res.total_ms / 1000, 1e-3),
+                    np.mean(lats) / 1000.0,
+                    slo_ms / 1000.0 * len(batch), 1) - 2.0 * viol / len(batch)
+        s2 = np.array([np.log1p(len(queue)), 0.0, np.log1p(served), 1.0],
+                      np.float32)
+        agent.observe(state, a, u, s2, False)
+        agent.update()
+    _report(served, violations, rounds, lat_sum,
+            time.perf_counter() - t0, slo_ms, "round")
+
+
+def serve_continuous(arch: str = "qwen3-0.6b", duration_s: float = 20.0,
+                     rps: float = 12.0, slo_ms: float = 1500.0,
+                     max_slots: int = 4) -> None:
+    """Continuous mode: arrivals are submitted into the slot engine as
+    they land and join the running batch at iteration boundaries."""
+    cfg = get_reduced_config(arch)
+    print(f"loading reduced {cfg.name} "
+          f"(d={cfg.d_model}, L={cfg.n_layers}), "
+          f"{max_slots} slots...")
+    engine = ContinuousBatchingEngine(cfg, max_slots=max_slots, max_seq=128)
+    rng = np.random.default_rng(0)
+
+    t0 = time.perf_counter()
+    next_arrival = rng.exponential(1.0 / rps)
+    submit_t = {}
+    served = violations = 0
+    lat_sum = 0.0
+    while time.perf_counter() - t0 < duration_s:
+        now = time.perf_counter() - t0
+        while next_arrival <= now:
+            prompt = rng.integers(1, cfg.vocab_size,
+                                  rng.integers(4, 24)).astype(np.int32)
+            rid = engine.submit(prompt, max_new_tokens=4)
+            submit_t[rid] = next_arrival
+            next_arrival += rng.exponential(1.0 / rps)
+        if not engine.active_slots and not engine.waiting:
+            time.sleep(0.002)
+            continue
+        for r in engine.step():
+            done_t = time.perf_counter() - t0
+            lat = (done_t - submit_t.pop(r.request_id, done_t)) * 1000.0
+            served += 1
+            lat_sum += lat
+            violations += int(lat > slo_ms)
+    _report(served, violations, engine.n_iters, lat_sum,
+            time.perf_counter() - t0, slo_ms, "continuous")
+    print(f"[continuous] engine stats: {engine.stats()}")
+
+
+def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
+         duration_s: float = 20.0, rps: float = 12.0,
+         slo_ms: float = 1500.0) -> None:
+    if exec_mode == "continuous":
+        serve_continuous(arch, duration_s, rps, slo_ms)
+    else:
+        serve_round(arch, duration_s, rps, slo_ms)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,4 @@
-"""Roofline analysis (EXPERIMENTS.md §Roofline).
+"""Roofline analysis (docs/EXPERIMENTS.md §Roofline).
 
 Three terms per (arch x shape x mesh), in seconds:
 

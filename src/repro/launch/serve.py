@@ -1,8 +1,11 @@
 """Serving launcher: BCEdge scheduler over the edge simulator (default) or
-the real-JAX engine (``--engine``).
+the real-JAX engine (``--engine``), in round or continuous execution mode
+(docs/ARCHITECTURE.md §5).
 
     PYTHONPATH=src python -m repro.launch.serve --platform xavier_nx \
         --episodes 6 --rps 30
+    PYTHONPATH=src python -m repro.launch.serve --exec-mode continuous \
+        --decode-steps 6
     PYTHONPATH=src python -m repro.launch.serve --engine --arch qwen3-0.6b
 """
 from __future__ import annotations
@@ -19,20 +22,23 @@ def main() -> None:
     ap.add_argument("--episodes", type=int, default=6)
     ap.add_argument("--episode-ms", type=float, default=20_000.0)
     ap.add_argument("--no-guard", action="store_true")
+    ap.add_argument("--exec-mode", default="round",
+                    choices=["round", "continuous"],
+                    help="round = run-to-completion (b, m_c) rounds "
+                         "(paper §IV-D); continuous = iteration-level "
+                         "batching (docs/ARCHITECTURE.md §5)")
+    ap.add_argument("--decode-steps", type=float, default=1.0,
+                    help="mean decode iterations per request (geometric); "
+                         ">1 makes the workload autoregressive")
     ap.add_argument("--engine", action="store_true",
                     help="serve a real reduced model instead of the sim")
     ap.add_argument("--arch", default="qwen3-0.6b")
     args = ap.parse_args()
 
     if args.engine:
-        import os
-        import sys
+        from repro.launch import engine_serve
 
-        repo = os.path.join(os.path.dirname(__file__), "..", "..", "..")
-        sys.path.insert(0, os.path.join(repo, "examples"))
-        import serve_llm
-
-        serve_llm.main()
+        engine_serve.main(exec_mode=args.exec_mode, arch=args.arch)
         return
 
     from repro.config.base import ServingConfig
@@ -44,7 +50,9 @@ def main() -> None:
 
     from repro.serving.profiler import PerformanceProfiler
 
-    cfg = ServingConfig(platform=args.platform, arrival_rps=args.rps)
+    cfg = ServingConfig(platform=args.platform, arrival_rps=args.rps,
+                        exec_mode=args.exec_mode,
+                        decode_steps_mean=max(1.0, args.decode_steps))
     env0 = EdgeServingEnv(cfg, episode_ms=1.0)
     agent = SACAgent(state_dim(env0.models), cfg.n_actions,
                      SACConfig(batch_size=256, lr=5e-4))
@@ -59,6 +67,7 @@ def main() -> None:
         util = profiler.utilization()
         print(f"ep{ep}: utility={s['mean_utility']:.2f} "
               f"thr={s['throughput_rps']:.1f}rps "
+              f"goodput={s['goodput_rps']:.1f}rps "
               f"viol={s['slo_violation_rate']:.1%} "
               f"lat={s['mean_latency_ms']:.0f}ms "
               f"busy={util['busy_frac']:.0%} "

@@ -1,2 +1,5 @@
+"""BCEdge serving layer (paper Fig. 2; component map in
+docs/ARCHITECTURE.md §1): request queues, workload, latency model,
+simulator, real-JAX engines, profiler, and the framework facade."""
 from repro.serving.simulator import EdgeServingEnv  # noqa: F401
 from repro.serving.platforms import PLATFORMS  # noqa: F401

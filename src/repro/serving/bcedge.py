@@ -24,6 +24,8 @@ from repro.serving.simulator import EdgeServingEnv
 
 @dataclasses.dataclass
 class EpisodeResult:
+    """Aggregated outcome of one serving episode (the quantities the
+    paper's Figs. 7-16 are computed from)."""
     summary: Dict[str, float]
     rewards: List[float]
     losses: List[float]
@@ -35,6 +37,10 @@ class EpisodeResult:
 
 
 class BCEdgeScheduler:
+    """Agent + SLO guard, the paper's Fig.-2 scheduler block (§IV-B with
+    the §IV-F predictor guard; continuous-mode reinterpretation in
+    docs/ARCHITECTURE.md §7)."""
+
     def __init__(self, env: EdgeServingEnv, agent,
                  predictor: Optional[NNInterferencePredictor] = None,
                  guard: bool = True):
@@ -49,14 +55,23 @@ class BCEdgeScheduler:
         """Deadline feasibility: the predicted round latency (plus the
         batch-formation wait still ahead) must fit the OLDEST queued
         request's remaining SLO budget — the paper's predictor-guided
-        robustness mechanism (§IV-F)."""
+        robustness mechanism (§IV-F).
+
+        Under exec_mode="continuous" the predictor is trained on
+        PER-ITERATION latency (see ``run_episode``), so Eq.-1 feasibility
+        is checked per iteration: one predicted iteration must fit the
+        per-iteration share of the budget, i.e. the remaining SLO budget
+        divided by the expected decode length of a request."""
         q = self.env.queues[model]
+        cfg = self.env.cfg
         prof = EDGE_MODELS[model]
-        slo = prof.slo_ms * self.env.cfg.slo_scale
+        slo = prof.slo_ms * cfg.slo_scale
         age = q.peek_oldest_age(self.env.now)
         fill_wait = max(0.0, b - len(q)) * 1000.0 / \
-            max(self.env.cfg.arrival_rps, 1e-3)
+            max(cfg.arrival_rps, 1e-3)
         budget_ms = max(slo - age - fill_wait, 2.0)
+        if cfg.exec_mode == "continuous":
+            budget_ms /= max(cfg.decode_steps_mean, 1.0)
         feats = self.env.predict_features(model, b, m_c)
         pred_lat_ms = self.predictor.predict(feats) * 1000.0
         _, other_mem = self.env._other_load(exclude=model)
@@ -129,7 +144,12 @@ def run_episode(env: EdgeServingEnv, agent,
                              "m_c": rnd.m_c, "n": rnd.n_requests,
                              "violations": rnd.violations})
             if predictor is not None and rnd.features is not None:
+                # round mode: the target is the round latency; continuous
+                # mode: the PER-ITERATION latency (the guard checks Eq.-1
+                # feasibility per iteration, see _feasible)
                 actual_s = max(rnd.finish_ms - rnd.start_ms, 1e-3) / 1000.0
+                if rnd.exec_mode == "continuous":
+                    actual_s /= max(rnd.n_iters, 1)
                 predictor.observe(rnd.features, actual_s)
         s = s2
         steps += 1

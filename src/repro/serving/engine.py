@@ -1,17 +1,29 @@
-"""Real-JAX inference engine: batched prefill + decode with KV caches.
+"""Real-JAX inference engines: round-based and continuous (iteration-level)
+batching over jit-compiled prefill/decode with KV caches.
 
-This is the execution backend the BCEdge scheduler drives when serving an
-actual model (examples/serve_llm.py): requests carry token prompts, the
-dynamic batcher forms (b, m_c) rounds, and the engine runs jit-compiled
-prefill/decode with shape bucketing (so the compile cache stays small).
-On CPU it serves the reduced configs; on a TPU pod the same code runs the
-full configs under the production mesh.
+Two execution backends the BCEdge scheduler can drive when serving an
+actual model (``repro.launch.engine_serve``):
+
+* ``InferenceEngine`` — the paper's round semantics (§IV-D): the dynamic
+  batcher forms a (b, m_c) round, the whole batch runs prefill + a fixed
+  number of decode steps to completion, then the next round starts.
+* ``ContinuousBatchingEngine`` — iteration-level scheduling
+  (docs/ARCHITECTURE.md §5): a fixed set of KV-cache *slots* is decoded
+  one token per step; finished sequences are evicted at iteration
+  boundaries and queued prompts are prefilled into the freed slots, so
+  short sequences never wait for the longest one in their batch.
+
+Both keep the jit compile cache small via shape bucketing: prompts are
+padded to power-of-two-ish buckets, and the continuous engine decodes a
+single fixed (n_slots, cache_len) shape for its whole lifetime.
+On CPU they serve the reduced configs; on a TPU pod the same code runs
+the full configs under the production mesh.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +41,38 @@ def _bucket(n: int, buckets=(1, 2, 4, 8, 16, 32, 64, 128)) -> int:
     return buckets[-1]
 
 
+SEQ_BUCKETS = (16, 32, 64, 128, 256, 512)
+
+
+def make_prefill_batch(cfg: ModelConfig, prompts: List[np.ndarray]
+                       ) -> Tuple[Dict, int, np.ndarray]:
+    """Left-pad ``prompts`` into a bucketed (B, S) token batch.
+
+    Shared by both engines so a prompt prefilled alone (continuous
+    admission) sees exactly the shapes it would see inside a round batch —
+    one compiled prefill per (B-bucket, S-bucket) pair.
+    """
+    B = _bucket(len(prompts))
+    S = _bucket(max(len(p) for p in prompts), buckets=SEQ_BUCKETS)
+    toks = np.zeros((B, S), np.int32)
+    lens = np.zeros((B,), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, S - len(p):] = p  # left-pad (last position = last token)
+        lens[i] = len(p)
+    batch = {"tokens": jnp.asarray(toks)}
+    if cfg.frontend is not None and not cfg.enc_dec:
+        F = cfg.frontend_tokens
+        batch["frontend_embeds"] = jnp.zeros(
+            (B, F, cfg.d_model), jnp.float32)
+    if cfg.enc_dec:
+        batch["frontend_embeds"] = jnp.zeros(
+            (B, max(8, S // 4), cfg.d_model), jnp.float32)
+    return batch, S, lens
+
+
 @dataclasses.dataclass
 class GenerationResult:
+    """Output of one round-mode ``generate`` call (paper §IV-D round)."""
     tokens: np.ndarray          # (B, new)
     prefill_ms: float
     decode_ms: float
@@ -38,6 +80,15 @@ class GenerationResult:
 
 
 class InferenceEngine:
+    """Round-based (run-to-completion) execution backend (paper §IV-D).
+
+    ``generate`` runs one (b,)-batch round: bucketed prefill, then
+    ``max_new_tokens`` lock-step decode iterations for every request in
+    the batch. This is the execution substrate the paper's (b, m_c)
+    scheduler assumes; see ``ContinuousBatchingEngine`` for the
+    iteration-level alternative.
+    """
+
     def __init__(self, cfg: ModelConfig, max_seq: int = 512,
                  dtype=jnp.float32, seed: int = 0):
         self.cfg = cfg
@@ -49,23 +100,7 @@ class InferenceEngine:
 
     def _make_batch(self, prompts: List[np.ndarray]
                     ) -> Tuple[Dict, int, np.ndarray]:
-        B = _bucket(len(prompts))
-        S = _bucket(max(len(p) for p in prompts),
-                    buckets=(16, 32, 64, 128, 256, 512))
-        toks = np.zeros((B, S), np.int32)
-        lens = np.zeros((B,), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, S - len(p):] = p  # left-pad (last position = last token)
-            lens[i] = len(p)
-        batch = {"tokens": jnp.asarray(toks)}
-        if self.cfg.frontend is not None and not self.cfg.enc_dec:
-            F = self.cfg.frontend_tokens
-            batch["frontend_embeds"] = jnp.zeros(
-                (B, F, self.cfg.d_model), jnp.float32)
-        if self.cfg.enc_dec:
-            batch["frontend_embeds"] = jnp.zeros(
-                (B, max(8, S // 4), self.cfg.d_model), jnp.float32)
-        return batch, S, lens
+        return make_prefill_batch(self.cfg, prompts)
 
     def generate(self, prompts: List[np.ndarray], max_new_tokens: int = 8,
                  greedy: bool = True, seed: int = 0) -> GenerationResult:
@@ -99,3 +134,227 @@ class InferenceEngine:
         return GenerationResult(out[: len(prompts)],
                                 (t1 - t0) * 1e3, (t2 - t1) * 1e3,
                                 (t2 - t0) * 1e3)
+
+
+# =====================================================================
+# continuous (iteration-level) batching
+# =====================================================================
+@dataclasses.dataclass
+class _Slot:
+    """One KV-cache slot: the sequence currently decoding in batch row i."""
+    request_id: int = -1
+    remaining: int = 0          # tokens still to emit
+    n_emitted: int = 0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    submit_s: float = 0.0
+    admit_s: float = 0.0
+
+    @property
+    def active(self) -> bool:
+        return self.request_id >= 0
+
+
+@dataclasses.dataclass
+class ContinuousResult:
+    """One finished sequence from the continuous engine
+    (docs/ARCHITECTURE.md §5 accounting: per-request, not per-round)."""
+    request_id: int
+    tokens: np.ndarray          # (n_emitted,)
+    submit_s: float             # perf_counter timestamps (engine clock)
+    admit_s: float
+    finish_s: float
+    n_iters: int                # decode iterations this sequence was live
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.admit_s - self.submit_s
+
+
+class ContinuousBatchingEngine:
+    """Iteration-level batching backend (docs/ARCHITECTURE.md §5; the
+    SLICE/Orca-style execution mode the simulator's
+    ``exec_mode="continuous"`` models analytically).
+
+    A fixed number of KV-cache slots is allocated once at
+    ``(n_slots, cache_len)``; every ``step()`` runs ONE jit-compiled
+    decode iteration over all slots (a single compiled shape for the
+    engine's lifetime). At iteration boundaries finished sequences are
+    evicted — their slot is freed immediately — and queued prompts are
+    prefilled (one compile per prompt-length bucket) and grafted into
+    free slots. Admission cost is one host-side cache scatter per
+    request, which is fine at the reduced-config scale this repo serves;
+    a production engine would fuse the graft into the prefill kernel.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_slots: int = 4,
+                 max_seq: int = 256, dtype=jnp.float32, seed: int = 0):
+        if cfg.enc_dec:
+            # cross-attention K/V is unmasked (_cross_core attends every
+            # encoder row), so grafting a shorter prefilled ck/cv into the
+            # slot cache would attend zero-padded garbage rows
+            raise NotImplementedError(
+                "continuous batching does not support encoder-decoder "
+                "architectures yet; use InferenceEngine")
+        self.cfg = cfg
+        self.n_slots = max(1, max_slots)
+        self.cache_len = max_seq
+        self.model = build_model(cfg, remat=False)
+        self.params = self.model.init(jax.random.PRNGKey(seed), dtype)
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step)
+        self.cache = self.model.init_cache(self.n_slots, self.cache_len,
+                                           dtype)
+        self.pos = np.zeros((self.n_slots,), np.int32)
+        self.pending_tok = np.zeros((self.n_slots,), np.int32)
+        self.slots = [_Slot() for _ in range(self.n_slots)]
+        self.waiting: List[Tuple[int, np.ndarray, int, float]] = []
+        self.n_iters = 0
+        self.n_admitted = 0
+        self.n_evicted = 0
+        self.prefill_shapes: Set[Tuple[int, int]] = set()
+        self._next_id = 0
+        self._t0 = time.perf_counter()
+
+    # ---- bookkeeping -----------------------------------------------------
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    @property
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.active]
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.active]
+
+    # ---- admission -------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 8) -> int:
+        """Queue a prompt; it joins a slot at the next iteration boundary."""
+        S = _bucket(len(prompt), buckets=SEQ_BUCKETS)
+        F = self.cfg.frontend_tokens if (self.cfg.frontend is not None
+                                         and not self.cfg.enc_dec) else 0
+        room = self.cache_len - (F + S)
+        if room < 1:
+            raise ValueError(
+                f"prompt bucket {S} (+{F} frontend) does not fit cache_len "
+                f"{self.cache_len}")
+        rid = self._next_id
+        self._next_id += 1
+        self.waiting.append((rid, np.asarray(prompt, np.int32),
+                             min(max_new_tokens, room), self._now()))
+        return rid
+
+    def _graft(self, one_cache, slot: int) -> None:
+        """Scatter a freshly-prefilled single-sequence cache into batch
+        row ``slot`` of the persistent slot cache, zero-padding each leaf
+        up to the slot cache's length axes (same semantics as
+        ``pad_cache``: prefill wrote [0, S), decode writes from S on)."""
+        def graft_layer(full_c, one_c, batch_axis: int):
+            def leaf(t, s):
+                row = jnp.take(s, 0, axis=batch_axis)
+                tslice = t.shape[:batch_axis] + t.shape[batch_axis + 1:]
+                pads = [(0, want - have)
+                        for have, want in zip(row.shape, tslice)]
+                if any(p != (0, 0) for p in pads):
+                    row = jnp.pad(row, pads)
+                idx = (slice(None),) * batch_axis + (slot,)
+                return t.at[idx].set(row)
+            return jax.tree.map(leaf, full_c, one_c)
+
+        new: Dict = {}
+        if "units" in self.cache:
+            new["units"] = tuple(
+                graft_layer(fc, oc, batch_axis=1)
+                for fc, oc in zip(self.cache["units"], one_cache["units"]))
+        if "tail" in self.cache:
+            new["tail"] = tuple(
+                graft_layer(fc, oc, batch_axis=0)
+                for fc, oc in zip(self.cache["tail"], one_cache["tail"]))
+        self.cache = new
+
+    def admit(self) -> int:
+        """Prefill waiting prompts into free slots. Returns #admissions."""
+        n = 0
+        free = self.free_slots
+        while self.waiting and free:
+            rid, prompt, max_new, submit_s = self.waiting.pop(0)
+            slot = free.pop(0)
+            batch, S, _ = make_prefill_batch(self.cfg, [prompt])
+            self.prefill_shapes.add(tuple(batch["tokens"].shape))
+            logits, one_cache = self._prefill(self.params, batch)
+            F = 0
+            if self.cfg.frontend is not None and not self.cfg.enc_dec:
+                F = batch["frontend_embeds"].shape[1]
+            self._graft(one_cache, slot)
+            self.pos[slot] = F + S
+            self.pending_tok[slot] = int(np.asarray(
+                jnp.argmax(logits[0, -1, :], -1)))
+            self.slots[slot] = _Slot(request_id=rid, remaining=max_new,
+                                     submit_s=submit_s, admit_s=self._now())
+            self.n_admitted += 1
+            n += 1
+        return n
+
+    # ---- iteration -------------------------------------------------------
+    def step(self) -> List[ContinuousResult]:
+        """One decode iteration over all slots; admits first, evicts after.
+
+        Returns the sequences that finished this iteration. Inactive
+        slots decode a dummy token in place (their cache row is masked by
+        ``pos`` and overwritten at the next admission), keeping the
+        compiled decode shape fixed at (n_slots, 1).
+        """
+        self.admit()
+        active = self.active_slots
+        if not active:
+            return []
+        for i in active:
+            s = self.slots[i]
+            s.tokens.append(int(self.pending_tok[i]))
+            s.n_emitted += 1
+            s.remaining -= 1
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(self.pending_tok[:, None]),
+             "pos": jnp.asarray(self.pos)})
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32))
+        self.n_iters += 1
+        finished: List[ContinuousResult] = []
+        now = self._now()
+        for i in active:
+            s = self.slots[i]
+            # stay inside the cache: clip sequences at capacity
+            if self.pos[i] + 1 >= self.cache_len:
+                s.remaining = 0
+            if s.remaining <= 0:
+                finished.append(ContinuousResult(
+                    s.request_id, np.asarray(s.tokens, np.int32),
+                    submit_s=s.submit_s, admit_s=s.admit_s, finish_s=now,
+                    n_iters=s.n_emitted))
+                self.slots[i] = _Slot()
+                self.n_evicted += 1
+            else:
+                self.pending_tok[i] = nxt[i]
+                self.pos[i] = self.pos[i] + 1
+        return finished
+
+    def run(self, prompts: List[np.ndarray], max_new_tokens: int = 8,
+            max_iters: int = 10_000) -> List[ContinuousResult]:
+        """Submit ``prompts`` and iterate until every sequence finishes."""
+        for p in prompts:
+            self.submit(p, max_new_tokens)
+        done: List[ContinuousResult] = []
+        while (self.waiting or self.active_slots) and max_iters > 0:
+            done.extend(self.step())
+            max_iters -= 1
+        done.sort(key=lambda r: r.request_id)
+        return done
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "n_iters": float(self.n_iters),
+            "n_admitted": float(self.n_admitted),
+            "n_evicted": float(self.n_evicted),
+            "n_prefill_shapes": float(len(self.prefill_shapes)),
+            "n_slots": float(self.n_slots),
+        }

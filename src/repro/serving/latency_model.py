@@ -25,6 +25,9 @@ from repro.serving.platforms import HardwareSpec
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionEstimate:
+    """One batch execution under the §III-A-3 computing model: raw
+    compute time, interference inflation (docs/ARCHITECTURE.md §2), and
+    the Eq.-4 memory-overflow flag."""
     compute_ms: float
     interference_factor: float
     mem_used_gb: float     # total accelerator memory in use (all instances)

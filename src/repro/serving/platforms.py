@@ -19,6 +19,8 @@ from typing import Dict
 
 @dataclasses.dataclass(frozen=True)
 class HardwareSpec:
+    """One edge platform's calibrated constants (paper Tables III/V;
+    calibration method in docs/ARCHITECTURE.md §2)."""
     name: str
     tops: float            # effective accelerator throughput (G-ops/ms = TOPS)
     mem_gb: float

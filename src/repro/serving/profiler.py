@@ -21,6 +21,7 @@ from repro.serving.simulator import CompletedRound, EdgeServingEnv
 
 @dataclasses.dataclass
 class ProfileEntry:
+    """Aggregated per-(model, b, m_c) execution record (paper §IV-E)."""
     count: int = 0
     total_requests: int = 0
     lat_ms: List[float] = dataclasses.field(default_factory=list)
@@ -55,7 +56,9 @@ class ProfileEntry:
 
 
 class PerformanceProfiler:
-    """Incremental consumer of the simulator's round history."""
+    """Incremental consumer of the simulator's round history — the §IV-E
+    periodic performance profiler (continuous-mode sessions are ingested
+    the same way, one CompletedRound per session)."""
 
     def __init__(self, window_rounds: int = 512):
         self.window = window_rounds

@@ -13,19 +13,30 @@ _counter = itertools.count()
 
 @dataclasses.dataclass(order=False)
 class Request:
+    """One inference request (paper §III-A-1 request model)."""
     model: str            # m_t: DNN model type
     input_type: str       # d_t: "image" | "text" | "speech"
     input_shape: tuple    # d_s
     slo_ms: float         # SLO_i
     arrival_ms: float
     seq: int = dataclasses.field(default_factory=lambda: next(_counter))
-    # filled at completion:
+    #: decode iterations this request needs (1 = single-shot inference;
+    #: >1 models an autoregressive request under exec_mode="continuous",
+    #: docs/ARCHITECTURE.md §5)
+    decode_steps: int = 1
+    #: iterations still to run once admitted (continuous-mode bookkeeping)
+    remaining: int = 0
+    # filled at dispatch/completion:
     start_ms: Optional[float] = None
     finish_ms: Optional[float] = None
 
     @property
     def deadline_ms(self) -> float:
         return self.arrival_ms + self.slo_ms
+
+    def queue_wait_ms(self) -> float:
+        assert self.start_ms is not None
+        return self.start_ms - self.arrival_ms
 
     def latency_ms(self) -> float:
         assert self.finish_ms is not None
@@ -36,7 +47,8 @@ class Request:
 
 
 class RequestQueue:
-    """SLO-priority queue: pops shortest-SLO first, FIFO among equals."""
+    """SLO-priority queue (paper §IV-C: "the shorter the SLO, the higher
+    the priority"): pops shortest-SLO first, FIFO among equals."""
 
     def __init__(self, model: str, max_len: int = 4096):
         self.model = model

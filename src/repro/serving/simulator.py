@@ -1,11 +1,12 @@
 """Discrete-event simulator of a multi-tenant edge serving platform.
 
 The container is CPU-only, so the Xavier-NX/Nano/TX2 hardware is simulated
-by the calibrated latency model (DESIGN.md §2). Semantics follow the paper:
+by the calibrated latency model (docs/ARCHITECTURE.md §2). Semantics follow
+the paper:
 
 * requests arrive Poisson (§V-A), one SLO-priority queue per model (§IV-C);
 * a scheduling decision for a model picks (b, m_c); the dynamic batcher
-  then FORMS the round: it waits until b*m_c requests are queued or the
+  then FORMS the round: it waits until b requests are queued or the
   Eq.-1 scheduling slot t_i = Σ SLO / m_c elapses (adaptive batching's
   time-window — this queue wait t_w is exactly why larger batches trade
   latency for throughput, Fig. 1);
@@ -13,12 +14,19 @@ by the calibrated latency model (DESIGN.md §2). Semantics follow the paper:
 * the next decision for a model happens when its round completes;
 * reward = utility U (Eq. 3/6) of the round; memory overflow fails it.
 
+Under ``ServingConfig.exec_mode == "continuous"`` the round is replaced by
+an iteration-level *session* (docs/ARCHITECTURE.md §5): the action becomes
+(max slots per instance, concurrency), the session advances one decode
+iteration at a time ("iter" events in the heap loop), finished requests
+leave and queued requests join at iteration boundaries, and utility/SLO
+metrics (Eq. 3/6) are computed per request rather than per round.
+
 Because rounds of different models overlap in time, the env is a per-model
-semi-MDP: ``step(action)`` commits the focus model's round and advances the
-event loop to the NEXT decision point (any model). Completed transitions
-(s, a, r, s') are emitted in ``info["transitions"]`` when their model
-reaches its next decision, so the RL agents see properly-ordered
-per-model experience.
+semi-MDP (docs/ARCHITECTURE.md §3): ``step(action)`` commits the focus
+model's round and advances the event loop to the NEXT decision point (any
+model). Completed transitions (s, a, r, s') are emitted in
+``info["transitions"]`` when their model reaches its next decision, so the
+RL agents see properly-ordered per-model experience.
 """
 from __future__ import annotations
 
@@ -43,6 +51,10 @@ IDLE, PENDING, ACTIVE = 0, 1, 2
 
 @dataclasses.dataclass
 class CompletedRound:
+    """One completed execution unit: a (b, m_c) round (paper §IV-D), or —
+    under exec_mode="continuous" — a whole iteration-level session
+    (docs/ARCHITECTURE.md §5), in which case ``n_iters`` > 1 and the
+    per-request lists carry the join/leave accounting."""
     model: str
     b: int
     m_c: int
@@ -56,6 +68,10 @@ class CompletedRound:
     utility: float
     mem_used_gb: float
     features: object = None  # interference-predictor features at start
+    exec_mode: str = "round"
+    n_iters: int = 1         # decode iterations (1 = single-shot round)
+    queue_waits_ms: Optional[List[float]] = None  # per request, >= 0
+    request_utilities: Optional[List[float]] = None  # per-request Eq. 3
 
     @property
     def throughput_rps(self) -> float:
@@ -75,7 +91,44 @@ class _Pending:
     action: int
 
 
+@dataclasses.dataclass
+class _Session:
+    """In-flight continuous-batching session (docs/ARCHITECTURE.md §5).
+
+    ``b * m_c`` KV slots are allocated for the whole session; ``active``
+    requests each consume one slot until their ``remaining`` decode
+    iterations run out, at which point they leave and a queued request
+    may join at the next iteration boundary. Admission closes at
+    ``admit_until_ms`` (the Eq.-1 scheduling slot) so the session — and
+    with it the semi-MDP decision epoch — always terminates."""
+    model: str
+    b: int
+    m_c: int
+    decision_ms: float
+    start_ms: float
+    admit_until_ms: float
+    mem_gb: float
+    state: np.ndarray
+    action: int
+    active: List[Request] = dataclasses.field(default_factory=list)
+    done: List[Request] = dataclasses.field(default_factory=list)
+    n_iters: int = 0
+    features: object = None
+
+    @property
+    def capacity(self) -> int:
+        return self.b * self.m_c
+
+
 class EdgeServingEnv:
+    """Per-model semi-MDP serving environment (paper §IV; event-loop and
+    decision semantics in docs/ARCHITECTURE.md §3, continuous mode §5).
+
+    ``step(action)`` commits the focus model's (b, m_c) round — or
+    continuous session — and advances the discrete-event loop to the
+    next decision point of any model; ``info["transitions"]`` carries
+    the completed per-model (s, a, r, s') tuples."""
+
     def __init__(self, cfg: ServingConfig = ServingConfig(),
                  models: Optional[Sequence[str]] = None,
                  episode_ms: float = 60_000.0, seed: int = 0):
@@ -92,8 +145,9 @@ class EdgeServingEnv:
     # ------------------------------------------------------------ reset
     def reset(self) -> np.ndarray:
         self.now = 0.0
-        self.workload = PoissonWorkload(self.cfg.arrival_rps, self.models,
-                                        seed=self.seed)
+        self.workload = PoissonWorkload(
+            self.cfg.arrival_rps, self.models, seed=self.seed,
+            decode_steps_mean=self.cfg.decode_steps_mean)
         self.queues: Dict[str, RequestQueue] = {
             m: RequestQueue(m, self.cfg.max_queue) for m in self.models}
         self._events: List[tuple] = []
@@ -139,6 +193,8 @@ class EdgeServingEnv:
         self._start_round(p)
 
     def _start_round(self, p: _Pending) -> None:
+        if self.cfg.exec_mode == "continuous":
+            return self._start_session(p)
         model = p.model
         self.pending.pop(model, None)
         prof = EDGE_MODELS[model]
@@ -152,7 +208,11 @@ class EdgeServingEnv:
         other_inst, other_mem = self._other_load(exclude=model)
         est = lm.estimate_execution(self.hw, prof, b_eff, p.m_c,
                                     other_inst, other_mem)
-        t_exec = est.total_ms
+        # run-to-completion: the whole batch decodes in lock-step until the
+        # LONGEST sequence finishes (single-shot requests: n_iters = 1, the
+        # paper's CNN/BERT regime; exec_mode="continuous" removes this wait)
+        n_iters = max([r.decode_steps for r in reqs], default=1)
+        t_exec = est.total_ms * n_iters
         if est.overflow:
             t_exec = 10.0 * max(slo_sum_ms / max(p.m_c, 1),
                                 self.hw.overhead_ms)
@@ -163,12 +223,13 @@ class EdgeServingEnv:
 
         t_t = lm.transmission_ms(self.hw, prof)
         t_s = lm.serialization_ms(b_eff)
-        lats, violations = [], 0
+        lats, waits, violations = [], [], 0
         for r in reqs:
             r.start_ms = start
             r.finish_ms = finish + t_t + t_s
             lat = r.latency_ms()
             lats.append(lat)
+            waits.append(r.queue_wait_ms())
             if est.overflow or lat > r.slo_ms * self.cfg.slo_scale:
                 violations += 1
 
@@ -191,7 +252,8 @@ class EdgeServingEnv:
             est.mem_used_gb - other_mem)
         rnd = CompletedRound(model, p.b, p.m_c, n, p.decision_ms, start,
                              finish, lats, violations, est.overflow, u,
-                             est.mem_used_gb, feats)
+                             est.mem_used_gb, feats, exec_mode="round",
+                             n_iters=n_iters, queue_waits_ms=waits)
         self._push_event(finish, "complete", rnd)
 
     def _handle_complete(self, rnd: CompletedRound) -> None:
@@ -199,6 +261,122 @@ class EdgeServingEnv:
         self.status[rnd.model] = IDLE
         self.history.append(rnd)
         self._ready_reward[rnd.model] = rnd.utility
+
+    # ------------------------------------------- continuous sessions (§5)
+    def _start_session(self, p: _Pending) -> None:
+        """Continuous-mode dispatch (docs/ARCHITECTURE.md §5): allocate
+        b*m_c KV slots for an iteration-level session instead of forming a
+        run-to-completion round."""
+        model = p.model
+        self.pending.pop(model, None)
+        prof = EDGE_MODELS[model]
+        other_inst, other_mem = self._other_load(exclude=model)
+        own_mem = p.m_c * lm.instance_memory_gb(prof, p.b)
+        mem = own_mem + other_mem
+        self.status[model] = ACTIVE
+        self.active[model] = (p.m_c, own_mem)
+        if mem > self.hw.mem_gb:
+            # Eq.-4 memory violation: the slot allocation itself does not
+            # fit — fail the formed batch outright, as round mode does
+            reqs = self.queues[model].pop_batch(p.b * p.m_c)
+            t_fail = 10.0 * max(prof.slo_ms * self.cfg.slo_scale,
+                                self.hw.overhead_ms)
+            finish = self.now + t_fail
+            lats, waits = [], []
+            for r in reqs:
+                r.start_ms = self.now
+                r.finish_ms = finish
+                lats.append(r.latency_ms())
+                waits.append(r.queue_wait_ms())
+            rnd = CompletedRound(model, p.b, p.m_c, len(reqs),
+                                 p.decision_ms, self.now, finish, lats,
+                                 len(reqs), True, -8.5, mem, None,
+                                 exec_mode="continuous", n_iters=1,
+                                 queue_waits_ms=waits)
+            self._push_event(finish, "complete", rnd)
+            return
+        # admission window = the Eq.-1 scheduling slot for the allocation:
+        # t_i = Σ_{j=1..b*m_c} SLO / m_c ≈ b * SLO. After it closes the
+        # session drains, so the semi-MDP decision epoch always terminates.
+        admit_window = p.b * prof.slo_ms * self.cfg.slo_scale
+        sess = _Session(model, p.b, p.m_c, p.decision_ms, self.now,
+                        self.now + admit_window, mem, p.state, p.action)
+        sess.features = interference_features(
+            self.hw.mem_gb - other_mem, 0.3 + 0.05 * other_inst,
+            self._accel_util(), p.m_c, p.b, prof.gflops, own_mem)
+        self._session_join(sess)
+        self._push_event(self.now + self._iter_ms(sess), "iter", sess)
+
+    def _session_join(self, sess: _Session) -> int:
+        """Admit queued requests into free slots (iteration boundary)."""
+        if self.now > sess.admit_until_ms:
+            return 0
+        q = self.queues[sess.model]
+        n = 0
+        while len(sess.active) < sess.capacity and len(q):
+            r = q.pop_batch(1)[0]
+            r.start_ms = self.now
+            r.remaining = max(1, r.decode_steps)
+            sess.active.append(r)
+            n += 1
+        return n
+
+    def _iter_ms(self, sess: _Session) -> float:
+        """Latency of ONE decode iteration at the current occupancy."""
+        prof = EDGE_MODELS[sess.model]
+        b_eff = max(1, int(np.ceil(len(sess.active) / sess.m_c)))
+        other_inst, other_mem = self._other_load(exclude=sess.model)
+        est = lm.estimate_execution(self.hw, prof, b_eff, sess.m_c,
+                                    other_inst, other_mem)
+        return est.total_ms
+
+    def _handle_iter(self, sess: _Session) -> None:
+        """One decode iteration just finished: leaves, then joins, then
+        either the next iteration or session completion."""
+        sess.n_iters += 1
+        prof = EDGE_MODELS[sess.model]
+        t_t = lm.transmission_ms(self.hw, prof)
+        still = []
+        for r in sess.active:
+            r.remaining -= 1
+            if r.remaining <= 0:
+                r.finish_ms = self.now + t_t + lm.serialization_ms(1)
+                sess.done.append(r)
+            else:
+                still.append(r)
+        sess.active = still
+        self._session_join(sess)
+        if sess.active:
+            self._push_event(self.now + self._iter_ms(sess), "iter", sess)
+        else:
+            self._finish_session(sess)
+
+    def _finish_session(self, sess: _Session) -> None:
+        """Per-request utility/SLO accounting (Eq. 3/6 per request, then
+        averaged) — the continuous-mode replacement for round utility."""
+        n = len(sess.done)
+        dur_s = max(self.now - sess.decision_ms, 1e-3) / 1000.0
+        thr = n / dur_s
+        lats, waits, utils = [], [], []
+        violations = 0
+        for r in sess.done:
+            lat = r.latency_ms()
+            lats.append(lat)
+            waits.append(r.queue_wait_ms())
+            if lat > r.slo_ms * self.cfg.slo_scale:
+                violations += 1
+            utils.append(utility(
+                max(thr, 1e-3), lat / 1000.0,
+                r.slo_ms * self.cfg.slo_scale / 1000.0, sess.m_c))
+        u = float(np.mean(utils)) if utils else 0.0
+        u -= 3.5 * (violations / max(n, 1))
+        rnd = CompletedRound(sess.model, sess.b, sess.m_c, n,
+                             sess.decision_ms, sess.start_ms, self.now,
+                             lats, violations, False, u, sess.mem_gb,
+                             sess.features, exec_mode="continuous",
+                             n_iters=sess.n_iters, queue_waits_ms=waits,
+                             request_utilities=utils)
+        self._handle_complete(rnd)
 
     # ------------------------------------------------------------ decisions
     def _decision_ready(self) -> List[str]:
@@ -224,6 +402,8 @@ class EdgeServingEnv:
                 self._handle_arrival(payload)
             elif kind == "deadline":
                 self._handle_deadline(payload)
+            elif kind == "iter":
+                self._handle_iter(payload)
             elif kind == "complete":
                 self._handle_complete(payload)
 
@@ -306,15 +486,21 @@ class EdgeServingEnv:
         n_req = sum(r.n_requests for r in rounds)
         viol = sum(r.violations for r in rounds)
         lats = [l for r in rounds for l in r.latencies_ms]
+        waits = [w for r in rounds for w in (r.queue_waits_ms or [])]
         return {
             "rounds": float(len(rounds)),
             "requests": float(n_req),
             "mean_utility": float(np.mean([r.utility for r in rounds])),
             "throughput_rps": 1000.0 * n_req / max(self.now, 1.0),
+            # goodput = SLO-met completions per second (Eq. 4 objective)
+            "goodput_rps": 1000.0 * (n_req - viol) / max(self.now, 1.0),
             "mean_latency_ms": float(np.mean(lats)) if lats else 0.0,
+            "p50_latency_ms": float(np.percentile(lats, 50)) if lats else 0.0,
             "p99_latency_ms": float(np.percentile(lats, 99)) if lats else 0.0,
+            "mean_queue_wait_ms": float(np.mean(waits)) if waits else 0.0,
             "slo_violation_rate": viol / max(n_req, 1),
             "overflow_rate": float(np.mean([r.overflow for r in rounds])),
             "mean_batch": float(np.mean([r.n_requests for r in rounds])),
             "mean_mc": float(np.mean([r.m_c for r in rounds])),
+            "mean_iters": float(np.mean([r.n_iters for r in rounds])),
         }

@@ -1,0 +1,93 @@
+"""Minimal fallback for the ``hypothesis`` API used by this test suite.
+
+Some containers this repo runs in don't ship ``hypothesis``. Rather than
+skipping every property test there, ``conftest.py`` registers this stub
+in ``sys.modules`` when (and only when) the real library is missing. It
+implements exactly the subset the suite uses — ``given``, ``settings``,
+``strategies.integers/floats/sampled_from`` — as a seeded random sampler
+that always exercises the strategy boundaries first. It does NOT shrink,
+track coverage, or persist a failure database; when real hypothesis is
+installed it is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+__version__ = "0.stub"
+
+_MAX_EXAMPLES_CAP = 25  # keep stubbed property sweeps fast
+
+
+class _Strategy:
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        #: boundary values tried before random sampling (min/max etc.)
+        self.boundary = tuple(boundary)
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 16) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                     boundary=(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                     boundary=(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements),
+                     boundary=elements[:1])
+
+
+def settings(**kw):
+    """Decorator recording settings; composes with ``given`` either way."""
+    def deco(fn):
+        fn._stub_settings = {**getattr(fn, "_stub_settings", {}), **kw}
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = {**getattr(fn, "_stub_settings", {}),
+                   **getattr(wrapper, "_stub_settings", {})}
+            n = min(int(cfg.get("max_examples", _MAX_EXAMPLES_CAP)),
+                    _MAX_EXAMPLES_CAP)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            names = sorted(strats)
+            # boundary sweep first (aligned tuples), then random examples
+            width = max((len(strats[k].boundary) for k in names),
+                        default=0)
+            for i in range(width):
+                drawn = {k: (strats[k].boundary[i]
+                             if i < len(strats[k].boundary)
+                             else strats[k].example(rng))
+                         for k in names}
+                fn(*args, **kwargs, **drawn)
+            for _ in range(max(0, n - width)):
+                drawn = {k: strats[k].example(rng) for k in names}
+                fn(*args, **kwargs, **drawn)
+        # hide the drawn parameters from pytest's fixture resolution
+        # (real hypothesis rewrites the signature the same way)
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strats])
+        return wrapper
+    return deco
+
+
+class strategies:  # noqa: N801 — mimics the hypothesis.strategies module
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)

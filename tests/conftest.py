@@ -1,10 +1,23 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real single CPU device; only launch/dryrun.py forces 512."""
+import importlib.util
 import os
 import sys
 
 # make `import repro` work without installing
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# property tests prefer real hypothesis; fall back to the bundled sampler
+# stub (tests/_hypothesis_stub.py) in containers that don't ship it
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", os.path.join(os.path.dirname(__file__),
+                                   "_hypothesis_stub.py"))
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    sys.modules["hypothesis"] = _stub
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402

@@ -1,0 +1,16 @@
+"""Docs stay honest: every doc file / section / flag / path referenced
+from docstrings, README.md and docs/*.md must exist (tools/check_docs_links.py)."""
+import importlib.util
+import os
+
+
+def test_docs_links_resolve(capsys):
+    root = os.path.join(os.path.dirname(__file__), "..")
+    spec = importlib.util.spec_from_file_location(
+        "check_docs_links", os.path.join(root, "tools",
+                                         "check_docs_links.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    rc = mod.main()
+    out = capsys.readouterr().out
+    assert rc == 0, f"broken doc references:\n{out}"
