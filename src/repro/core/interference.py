@@ -152,3 +152,26 @@ def interference_features(mem_avail_gb: float, cpu_util: float,
     return np.array([mem_avail_gb, cpu_util, accel_util, float(m_c),
                      np.log1p(float(b)), np.log1p(gflops),
                      model_mem_gb], np.float32)
+
+
+def engine_features(cfg, m_c: int, b: int,
+                    total_instances: int) -> np.ndarray:
+    """Fig.-5 feature vector for a MEASURED engine iteration
+    (docs/RUNTIME.md): the multi-model pool has no hardware counters on
+    this host, so utilisation is proxied by live-instance counts and the
+    per-sample compute/memory footprint is derived analytically from the
+    served ``ModelConfig`` (2 FLOPs per active parameter per token).
+
+    ``m_c``/``b`` are the instances and active slots of the observed
+    model; ``total_instances`` counts every live instance in the pool
+    (other tenants included), which is what drives contention.
+    """
+    active_p = cfg.param_count_estimate(active_only=True)
+    gflops = 2.0 * active_p / 1e9
+    weights_gb = 4.0 * cfg.param_count_estimate() / 1e9  # fp32 on host
+    return interference_features(
+        mem_avail_gb=max(0.0, 8.0 - total_instances * weights_gb),
+        cpu_util=min(1.0, 0.125 * total_instances),
+        accel_util=min(1.0, 0.125 * total_instances),
+        m_c=m_c, b=b, gflops=gflops,
+        model_mem_gb=m_c * weights_gb)

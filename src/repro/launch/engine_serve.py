@@ -6,29 +6,39 @@ architecture running under jit on this host, wall-clock latencies and
 all. Requests with token prompts arrive Poisson; utilities are computed
 from measured latencies (Eq. 3).
 
-Two execution modes, mirroring the simulator's ``exec_mode``:
+Three serving modes:
 
 * ``round`` — the SAC scheduler picks the batch size per round and the
   ``InferenceEngine`` runs each round to completion (paper §IV-D);
 * ``continuous`` — the ``ContinuousBatchingEngine`` decodes a fixed set
   of KV slots one iteration at a time; arrivals are submitted as they
-  land and join at iteration boundaries (docs/ARCHITECTURE.md §5).
+  land and join at iteration boundaries (docs/ARCHITECTURE.md §5);
+* ``--models a,b`` multi-model pool serve — N concurrent engine
+  instances across heterogeneous models behind the ``ModelInstancePool``
+  runtime, with the ``PoolScheduler`` driving the REAL (b, m_c) action
+  per model (docs/RUNTIME.md; continuous-only).
 
 Run:  PYTHONPATH=src python -m repro.launch.serve --engine
       PYTHONPATH=src python -m repro.launch.serve --engine \
           --exec-mode continuous
+      PYTHONPATH=src python -m repro.launch.serve --engine \
+          --models qwen3-0.6b,recurrentgemma-2b --exec-mode continuous
 """
 from __future__ import annotations
 
 import time
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
 from repro.config import get_reduced_config
 from repro.config.base import ServingConfig
+from repro.core.interference import NNInterferencePredictor
 from repro.core.sac import SACAgent, SACConfig
 from repro.core.utility import utility
+from repro.serving.bcedge import PoolScheduler
 from repro.serving.engine import ContinuousBatchingEngine, InferenceEngine
+from repro.serving.runtime import ModelInstancePool
 
 
 def _report(served: int, violations: int, rounds: int, lat_sum: float,
@@ -136,10 +146,92 @@ def serve_continuous(arch: str = "qwen3-0.6b", duration_s: float = 20.0,
     print(f"[continuous] engine stats: {engine.stats()}")
 
 
+def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
+               duration_s: float = 20.0, rps: float = 12.0,
+               slo_ms: float = 2000.0, max_instances: int = 4,
+               max_slots: int = 4, max_new_tokens: int = 4,
+               control_ms: float = 500.0, seed: int = 0
+               ) -> Dict[str, Dict[str, float]]:
+    """Multi-model pool serve (docs/RUNTIME.md): Poisson arrivals per
+    model are routed by deadline into a ``ModelInstancePool`` of live
+    engine instances while the ``PoolScheduler`` re-decides (b, m_c) per
+    model once per Eq.-1 slot (clamped to [control_ms, 2000] ms).
+    Returns the pool's per-model report."""
+    cfgs = {m: get_reduced_config(m) for m in models}
+    for m, cfg in cfgs.items():
+        print(f"loading reduced {cfg.name} "
+              f"(d={cfg.d_model}, L={cfg.n_layers})...")
+    pool = ModelInstancePool(cfgs, max_instances=max_instances,
+                             max_slots=max_slots, max_seq=128, seed=seed,
+                             strict_admission=True,
+                             predictor=NNInterferencePredictor(seed=seed))
+    per_model_mc = max(1, max_instances // max(1, len(cfgs)))
+    scfg = ServingConfig(
+        batch_sizes=tuple(b for b in (1, 2, 4, 8) if b <= max_slots),
+        concurrency_levels=tuple(range(1, per_model_mc + 1)))
+    sched = PoolScheduler(pool, scfg,
+                          slo_ms={m: slo_ms for m in cfgs},
+                          decode_steps_mean=max_new_tokens, seed=seed)
+    sched.control()  # initial allocation (spawns the first instances)
+
+    # warm the jit caches (prefill buckets + decode shape) so compile
+    # time never counts against request SLOs, then zero the metrics
+    for m in cfgs:
+        if pool.m_c(m) == 0:
+            pool.scale_to(m, 1)
+    pool.warmup(seed=seed)
+
+    rng = np.random.default_rng(seed)
+    per_rps = rps / max(1, len(cfgs))
+    next_arrival = {m: rng.exponential(1.0 / per_rps) for m in cfgs}
+    next_control = control_ms / 1000.0
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < duration_s:
+        now = time.perf_counter() - t0
+        for m, cfg in cfgs.items():
+            while next_arrival[m] <= now:
+                prompt = rng.integers(1, cfg.vocab_size,
+                                      rng.integers(4, 24)).astype(np.int32)
+                pool.submit(m, prompt, slo_ms=slo_ms,
+                            max_new_tokens=max_new_tokens)
+                next_arrival[m] += rng.exponential(1.0 / per_rps)
+        if now >= next_control:
+            applied = sched.control()
+            slot = max(pool.slot_ms(m) for m in cfgs)
+            next_control = now + float(
+                np.clip(slot, control_ms, 2000.0)) / 1000.0
+            print(f"[pool t={now:5.1f}s] (b, m_c)={applied} "
+                  f"live={pool.total_live()}")
+        if not any(i.n_resident for i in pool.live()) \
+                and not any(pool.queues.values()):
+            time.sleep(0.002)
+            continue
+        sched.record(pool.step())
+
+    report = pool.report()
+    dur = time.perf_counter() - t0
+    for m, row in report.items():
+        print(f"[pool:{m}] served {row['served']:.0f} "
+              f"({row['served']/max(dur,1e-6):.1f} rps), "
+              f"SLO attainment {row['slo_attainment']:.1%}, "
+              f"mean latency {row['mean_latency_ms']:.0f}ms, "
+              f"utility {row['mean_utility']:.2f}, m_c={row['m_c']:.0f}")
+    print(f"[pool] stats: {pool.stats()}")
+    print(f"[pool] guard interventions: {sched.guard_interventions}")
+    return report
+
+
 def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
          duration_s: float = 20.0, rps: float = 12.0,
-         slo_ms: float = 1500.0) -> None:
-    if exec_mode == "continuous":
+         slo_ms: float = 1500.0, models: Optional[Sequence[str]] = None,
+         max_instances: int = 4) -> None:
+    if models:
+        if exec_mode != "continuous":
+            print("multi-model pool serving is continuous-only; "
+                  "running with --exec-mode continuous")
+        serve_pool(models, duration_s, rps, slo_ms,
+                   max_instances=max_instances)
+    elif exec_mode == "continuous":
         serve_continuous(arch, duration_s, rps, slo_ms)
     else:
         serve_round(arch, duration_s, rps, slo_ms)

@@ -7,6 +7,9 @@ the real-JAX engine (``--engine``), in round or continuous execution mode
     PYTHONPATH=src python -m repro.launch.serve --exec-mode continuous \
         --decode-steps 6
     PYTHONPATH=src python -m repro.launch.serve --engine --arch qwen3-0.6b
+    PYTHONPATH=src python -m repro.launch.serve --engine \
+        --models qwen3-0.6b,recurrentgemma-2b --exec-mode continuous \
+        --max-instances 4
 """
 from __future__ import annotations
 
@@ -33,12 +36,25 @@ def main() -> None:
     ap.add_argument("--engine", action="store_true",
                     help="serve a real reduced model instead of the sim")
     ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated arch ids for the multi-model "
+                         "pool serve mode (docs/RUNTIME.md); requires "
+                         "--engine, continuous-only")
+    ap.add_argument("--max-instances", type=int, default=4,
+                    help="pool-wide live engine instance budget shared "
+                         "by all --models")
     args = ap.parse_args()
+
+    if args.models and not args.engine:
+        ap.error("--models requires --engine (the simulator is already "
+                 "multi-tenant over the paper's Table-IV models)")
 
     if args.engine:
         from repro.launch import engine_serve
 
-        engine_serve.main(exec_mode=args.exec_mode, arch=args.arch)
+        models = [m for m in (args.models or "").split(",") if m] or None
+        engine_serve.main(exec_mode=args.exec_mode, arch=args.arch,
+                          models=models, max_instances=args.max_instances)
         return
 
     from repro.config.base import ServingConfig

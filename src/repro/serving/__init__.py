@@ -1,5 +1,15 @@
 """BCEdge serving layer (paper Fig. 2; component map in
 docs/ARCHITECTURE.md §1): request queues, workload, latency model,
-simulator, real-JAX engines, profiler, and the framework facade."""
+simulator, real-JAX engines, the multi-model instance-pool runtime
+(docs/RUNTIME.md), profiler, and the framework facade."""
 from repro.serving.simulator import EdgeServingEnv  # noqa: F401
 from repro.serving.platforms import PLATFORMS  # noqa: F401
+
+
+def __getattr__(name):
+    # lazy: the runtime drags in jax via the engine; keep bare
+    # `import repro.serving` light for the simulator-only paths
+    if name == "ModelInstancePool":
+        from repro.serving.runtime import ModelInstancePool
+        return ModelInstancePool
+    raise AttributeError(name)

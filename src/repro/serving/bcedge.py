@@ -6,6 +6,15 @@ SLO-aware interference predictor estimates the round latency — if it
 exceeds the scheduling-slot budget (Eq. 1) or memory capacity, the guard
 degrades the action to the nearest feasible (b, m_c) (paper §IV-F: the
 predictor "guides the scheduler to make more robust decisions").
+
+Two driver classes live here:
+
+* ``BCEdgeScheduler`` + ``run_episode`` — the simulator path (paper
+  experiments, Figs. 7-16);
+* ``PoolScheduler`` — the REAL runtime path: the same (b, m_c) action
+  applied to a ``ModelInstancePool`` of live engine instances
+  (docs/RUNTIME.md), where b caps active slots per instance and m_c
+  scales the instance count via the pool lifecycle API.
 """
 from __future__ import annotations
 
@@ -173,6 +182,132 @@ def run_episode(env: EdgeServingEnv, agent,
         per_model_latency={m: float(np.mean(v)) for m, v in per_lat.items()},
         timeline=timeline,
     )
+
+
+#: state vector fed to the per-model pool agents (docs/RUNTIME.md):
+#: [log1p(queue), oldest slack s, own m_c share, total live share,
+#:  log1p(predicted iter ms), log1p(Eq.-1 slot ms)]
+POOL_STATE_DIM = 6
+
+
+class PoolScheduler:
+    """(b, m_c) scheduler over a REAL ``ModelInstancePool``
+    (docs/RUNTIME.md): b caps the active slots per instance, m_c is
+    applied through ``pool.scale_to`` so the action actually spawns or
+    drains live engine instances. One agent per model; the SLO guard
+    degrades infeasible actions using the contention model the pool
+    calibrates from its own measured iteration latencies (the real-engine
+    counterpart of the §IV-F predictor guard)."""
+
+    def __init__(self, pool, cfg: ServingConfig,
+                 slo_ms: Optional[Dict[str, float]] = None,
+                 decode_steps_mean: float = 8.0, guard: bool = True,
+                 learn: bool = True, seed: int = 0, agents=None):
+        self.pool = pool
+        self.cfg = cfg
+        self.slo_ms = dict(slo_ms or {})
+        self.decode_steps_mean = max(1.0, decode_steps_mean)
+        self.guard = guard
+        self.learn = learn
+        self.guard_interventions = 0
+        if agents is None:
+            from repro.core.sac import SACAgent, SACConfig
+            agents = {m: SACAgent(POOL_STATE_DIM, cfg.n_actions,
+                                  SACConfig(batch_size=32, lr=1e-3),
+                                  seed=seed + i)
+                      for i, m in enumerate(pool.configs)}
+        self.agents = agents
+        self._last: Dict[str, tuple] = {}      # model -> (state, action)
+        self._since: Dict[str, list] = {m: [] for m in pool.configs}
+
+    # ---- feedback --------------------------------------------------------
+    def record(self, results) -> None:
+        """Feed finished PoolResults back (call after every pool.step)."""
+        for r in results:
+            self._since[r.model].append(r)
+
+    def _reward(self, model: str) -> float:
+        """Mean per-request Eq.-3 utility since the last decision, with
+        the simulator's Eq.-4 violation penalty."""
+        rs = self._since[model]
+        self._since[model] = []
+        if not rs:
+            return 0.0
+        served = [r.utility for r in rs if not r.rejected]
+        u = float(np.mean(served)) if served else 0.0
+        return u - 3.5 * sum(r.violated for r in rs) / len(rs)
+
+    # ---- state / guard ---------------------------------------------------
+    def _state(self, model: str) -> np.ndarray:
+        p = self.pool
+        t1, c = p.contention()
+        pred = lm.predicted_iter_ms(t1, c, max(1, p.total_live()))
+        slack = p.oldest_slack_ms(model)
+        slack = min(slack, 10_000.0)
+        return np.array([
+            np.log1p(p.queue_len(model)),
+            slack / 1000.0,
+            p.m_c(model) / max(1, p.max_instances),
+            p.total_live() / max(1, p.max_instances),
+            np.log1p(max(pred, 0.0)),
+            np.log1p(max(p.slot_ms(model), 0.0)),
+        ], np.float32)
+
+    def _feasible(self, model: str, m_c: int) -> bool:
+        """Eq.-1 feasibility per iteration at the PROPOSED overlap: the
+        calibrated contention model's predicted pool-iteration latency
+        must fit the most urgent request's per-iteration budget. The
+        prediction counts BUSY instances (what the samples are recorded
+        against) at the proposed concurrency; the b axis does not enter
+        the contention model, so feasibility only constrains m_c."""
+        t1, c = self.pool.contention()
+        if t1 <= 0.0:
+            return True  # not calibrated yet: trust the agent
+        busy_others = self.pool.busy_count() - sum(
+            1 for i in self.pool.live(model) if i.n_resident > 0)
+        pred_ms = lm.predicted_iter_ms(t1, c, max(1, busy_others + m_c))
+        slack = self.pool.oldest_slack_ms(model)
+        if slack == float("inf"):
+            slack = self.slo_ms.get(model, 1000.0)
+        budget = max(slack, 2.0) / self.decode_steps_mean
+        return pred_ms <= budget
+
+    def _apply(self, model: str, a: int) -> int:
+        cfg = self.cfg
+        b, m_c = cfg.action_to_pair(a)
+        # under backlog the guard steps aside (same rationale as the
+        # simulator path: only throughput clears an old queue)
+        slo = self.slo_ms.get(model, 1000.0)
+        backlog = self.pool.oldest_slack_ms(model) < 0.5 * slo
+        if self.guard and not backlog and not self._feasible(model, m_c):
+            self.guard_interventions += 1
+            ms = list(cfg.concurrency_levels)
+            mi = ms.index(m_c)
+            while mi > 0:
+                mi -= 1  # concurrency is what contends; b stays as chosen
+                if self._feasible(model, ms[mi]):
+                    break
+            m_c = ms[mi]
+        self.pool.set_slot_cap(model, b)
+        self.pool.scale_to(model, m_c)
+        return cfg.pair_to_action(b, m_c)
+
+    # ---- decision epoch --------------------------------------------------
+    def control(self) -> Dict[str, tuple]:
+        """One decision per model: close the previous (s, a, r, s')
+        transition, pick a new (b, m_c), and apply it to the pool. Call
+        once per Eq.-1 slot (docs/RUNTIME.md)."""
+        applied = {}
+        for model, agent in self.agents.items():
+            s = self._state(model)
+            if self.learn and model in self._last:
+                s0, a0 = self._last[model]
+                agent.observe(s0, a0, self._reward(model), s, False)
+                agent.update()
+            a = self._apply(model, agent.act(s))
+            self._last[model] = (s, a)
+            applied[model] = self.cfg.action_to_pair(a)
+        return applied
 
 
 def collect_interference_dataset(cfg: ServingConfig, n: int = 2000,

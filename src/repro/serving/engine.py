@@ -38,7 +38,11 @@ def _bucket(n: int, buckets=(1, 2, 4, 8, 16, 32, 64, 128)) -> int:
     for b in buckets:
         if n <= b:
             return b
-    return buckets[-1]
+    # clamping here would silently under-count S downstream (the cache-fit
+    # check in ContinuousBatchingEngine.submit would pass for prompts that
+    # do not fit), so over-length input is an error at the boundary
+    raise ValueError(
+        f"size {n} exceeds the largest bucket {buckets[-1]}")
 
 
 SEQ_BUCKETS = (16, 32, 64, 128, 256, 512)
@@ -187,7 +191,8 @@ class ContinuousBatchingEngine:
     """
 
     def __init__(self, cfg: ModelConfig, max_slots: int = 4,
-                 max_seq: int = 256, dtype=jnp.float32, seed: int = 0):
+                 max_seq: int = 256, dtype=jnp.float32, seed: int = 0,
+                 share_from: "ContinuousBatchingEngine" = None):
         if cfg.enc_dec:
             # cross-attention K/V is unmasked (_cross_core attends every
             # encoder row), so grafting a shorter prefilled ck/cv into the
@@ -198,10 +203,20 @@ class ContinuousBatchingEngine:
         self.cfg = cfg
         self.n_slots = max(1, max_slots)
         self.cache_len = max_seq
-        self.model = build_model(cfg, remat=False)
-        self.params = self.model.init(jax.random.PRNGKey(seed), dtype)
-        self._prefill = jax.jit(self.model.prefill)
-        self._decode = jax.jit(self.model.decode_step)
+        if share_from is not None and share_from.cfg == cfg:
+            # co-resident instances of the same model share weights and
+            # jit caches (docs/RUNTIME.md: spawn must be cheap for the
+            # pool's scale_to to be a usable action); the KV slot cache
+            # below stays per-instance
+            self.model = share_from.model
+            self.params = share_from.params
+            self._prefill = share_from._prefill
+            self._decode = share_from._decode
+        else:
+            self.model = build_model(cfg, remat=False)
+            self.params = self.model.init(jax.random.PRNGKey(seed), dtype)
+            self._prefill = jax.jit(self.model.prefill)
+            self._decode = jax.jit(self.model.decode_step)
         self.cache = self.model.init_cache(self.n_slots, self.cache_len,
                                            dtype)
         self.pos = np.zeros((self.n_slots,), np.int32)

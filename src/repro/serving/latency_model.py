@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 from repro.configs.paper_edge_models import EdgeModelProfile
 from repro.serving.platforms import HardwareSpec
@@ -80,6 +80,44 @@ def estimate_execution(hw: HardwareSpec, model: EdgeModelProfile, b: int,
     overflow = mem > hw.mem_gb
     f = interference_factor(hw, total_inst, mem)
     return ExecutionEstimate(compute_ms, f, mem, overflow)
+
+
+def fit_contention(samples: Sequence[Tuple[int, float]]
+                   ) -> Tuple[float, float]:
+    """Calibrate the linear part of :func:`interference_factor` from
+    MEASURED per-iteration latencies (docs/RUNTIME.md: the multi-model
+    runtime records (total live instances, iteration wall latency) pairs
+    while instances overlap).
+
+    Fits ``iter_ms ≈ t1 * (1 + c * (n - 1))`` by least squares and returns
+    ``(t1_ms, c)`` — the single-instance iteration latency and the
+    per-extra-instance slowdown coefficient (the measured counterpart of
+    ``HardwareSpec.contention``). With fewer than two distinct overlap
+    levels the slope is unidentifiable and ``c = 0.0`` is returned.
+    """
+    if not samples:
+        return 0.0, 0.0
+    xs = [float(max(1, n) - 1) for n, _ in samples]
+    ys = [float(t) for _, t in samples]
+    n = len(xs)
+    if len(set(xs)) < 2:
+        return sum(ys) / n, 0.0
+    mx, my = sum(xs) / n, sum(ys) / n
+    sxx = sum((x - mx) ** 2 for x in xs)
+    sxy = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+    slope = sxy / sxx
+    t1 = my - slope * mx
+    if t1 <= 1e-9:  # degenerate fit: fall back to the overlap-1 mean
+        base = [y for x, y in zip(xs, ys) if x == min(xs)]
+        t1 = sum(base) / len(base)
+    return t1, max(0.0, slope / max(t1, 1e-9))
+
+
+def predicted_iter_ms(t1_ms: float, contention: float, n_instances: int
+                      ) -> float:
+    """Iteration latency the :func:`fit_contention` model predicts when
+    ``n_instances`` engine instances are live on the host."""
+    return t1_ms * (1.0 + contention * max(0, n_instances - 1))
 
 
 def transmission_ms(hw: HardwareSpec, model: EdgeModelProfile) -> float:

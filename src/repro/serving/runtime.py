@@ -1,0 +1,502 @@
+"""Multi-model concurrent serving runtime: the REAL m_c axis
+(docs/RUNTIME.md; state machine, admission rules and Eq.-1 accounting
+are specified there).
+
+BCEdge's scheduler co-optimises batch size and the number of concurrent
+model instances, but until this module the second axis only existed
+analytically in the simulator. ``ModelInstancePool`` owns N live
+``ContinuousBatchingEngine`` instances across heterogeneous
+``ModelConfig``s, so a ``(b, m_c)`` action really creates/destroys
+concurrent engine instances:
+
+* **router** — one earliest-deadline-first queue per model; at every
+  iteration boundary waiting requests are admitted into the least-loaded
+  RUNNING instance of their model (docs/RUNTIME.md admission rules);
+* **lifecycle** — ``scale_to(model, m_c)`` spawns or drains instances
+  (STARTING → RUNNING → DRAINING → RETIRED); draining instances finish
+  their resident sequences before they are retired, so scale-down never
+  truncates in-flight work;
+* **interference path** — every ``step()`` measures the wall-clock
+  iteration latency together with the number of live instances that
+  overlapped it; the samples calibrate the contention model
+  (``latency_model.fit_contention``) and, via ``engine_features``, feed
+  the §IV-F NN interference predictor with real measurements.
+
+Instances of the same model share weights and jit caches
+(``ContinuousBatchingEngine(share_from=...)``) so ``spawn`` is cheap
+enough to be a per-decision action; each instance keeps its own KV slot
+cache, which is what actually bounds m_c on a real host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.core.interference import engine_features
+from repro.core.utility import utility
+from repro.serving import latency_model as lm
+from repro.serving.engine import ContinuousBatchingEngine
+
+# instance lifecycle states (docs/RUNTIME.md state machine)
+STARTING = "starting"
+RUNNING = "running"
+DRAINING = "draining"
+RETIRED = "retired"
+
+_seq = itertools.count()
+
+
+@dataclasses.dataclass
+class PoolRequest:
+    """One request routed by the pool (paper §III-A-1, with an absolute
+    deadline for the EDF router)."""
+    request_id: int
+    model: str
+    prompt: np.ndarray
+    slo_ms: float
+    max_new_tokens: int
+    submit_s: float            # pool clock
+    admit_s: float = -1.0      # set by the router at admission
+
+    @property
+    def deadline_s(self) -> float:
+        return self.submit_s + self.slo_ms / 1000.0
+
+
+@dataclasses.dataclass
+class PoolResult:
+    """One finished (or rejected) request, with per-request Eq.-3
+    utility computed at completion time."""
+    request_id: int
+    model: str
+    instance_id: int           # -1 when rejected before admission
+    tokens: np.ndarray
+    submit_s: float
+    admit_s: float
+    finish_s: float
+    slo_ms: float
+    utility: float = 0.0
+    rejected: bool = False
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.finish_s - self.submit_s) * 1000.0
+
+    @property
+    def violated(self) -> bool:
+        return self.rejected or self.latency_ms > self.slo_ms
+
+
+class ModelInstance:
+    """One live engine instance plus its lifecycle state and the pool's
+    per-instance bookkeeping (resident requests, Eq.-1 slot share)."""
+
+    def __init__(self, instance_id: int, model: str,
+                 engine: ContinuousBatchingEngine):
+        self.instance_id = instance_id
+        self.model = model
+        self.engine = engine
+        self.state = STARTING
+        self.requests: Dict[int, PoolRequest] = {}  # engine rid -> request
+        self.n_served = 0
+
+    @property
+    def n_resident(self) -> int:
+        """Sequences currently owned by this instance (decoding or
+        waiting inside the engine for the next iteration boundary)."""
+        return len(self.requests)
+
+    @property
+    def free_capacity(self) -> int:
+        return self.engine.n_slots - self.n_resident
+
+    @property
+    def slo_sum_ms(self) -> float:
+        """Σ SLO over resident requests — this instance's contribution to
+        the model's Eq.-1 scheduling slot (docs/RUNTIME.md)."""
+        return sum(r.slo_ms for r in self.requests.values())
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"ModelInstance({self.instance_id}, {self.model!r}, "
+                f"{self.state}, resident={self.n_resident})")
+
+
+class ModelInstancePool:
+    """N concurrent engine instances behind per-model EDF queues
+    (docs/RUNTIME.md). The unit of progress is ``step()``: route waiting
+    requests, run one decode iteration on every busy instance, retire
+    empty draining instances, and record the iteration's wall latency
+    against the overlap level for interference calibration."""
+
+    def __init__(self, configs: Dict[str, ModelConfig],
+                 max_instances: int = 8, max_slots: int = 4,
+                 max_seq: int = 128, seed: int = 0,
+                 strict_admission: bool = False,
+                 predictor=None):
+        self.configs = dict(configs)
+        self.max_instances = max_instances
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.seed = seed
+        self.strict_admission = strict_admission
+        self.predictor = predictor
+        self.instances: Dict[str, List[ModelInstance]] = {
+            m: [] for m in self.configs}
+        self.slot_caps: Dict[str, int] = {m: max_slots for m in self.configs}
+        self.queues: Dict[str, List[tuple]] = {m: [] for m in self.configs}
+        self._templates: Dict[str, ContinuousBatchingEngine] = {}
+        self.admission_log: List[Tuple[int, int]] = []  # (request, instance)
+        self.retired: List[ModelInstance] = []
+        self.n_rejected = 0
+        self.n_steps = 0
+        #: (total live instances, iteration wall ms) calibration samples
+        self.contention_samples: List[Tuple[int, float]] = []
+        self._results: Dict[str, List[PoolResult]] = {
+            m: [] for m in self.configs}
+        self._next_rid = 0
+        self._next_iid = 0
+        self._t0 = time.perf_counter()
+
+    # ---- clock -----------------------------------------------------------
+    def now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    # ---- lifecycle (docs/RUNTIME.md state machine) -----------------------
+    def live(self, model: Optional[str] = None) -> List[ModelInstance]:
+        """RUNNING + DRAINING instances (they still hold resources)."""
+        models = [model] if model else list(self.instances)
+        return [i for m in models for i in self.instances[m]
+                if i.state in (RUNNING, DRAINING)]
+
+    def running(self, model: str) -> List[ModelInstance]:
+        return [i for i in self.instances[model] if i.state == RUNNING]
+
+    def m_c(self, model: str) -> int:
+        return len(self.running(model))
+
+    def total_live(self) -> int:
+        return len(self.live())
+
+    def busy_count(self) -> int:
+        """Live instances with resident work — the overlap level the
+        contention samples are recorded against (idle instances cost no
+        iteration time, so predictions must not count them)."""
+        return sum(1 for i in self.live() if i.n_resident > 0)
+
+    def spawn(self, model: str) -> ModelInstance:
+        """STARTING → RUNNING. Raises when the pool-wide instance budget
+        is exhausted (use scale_to for clamped semantics)."""
+        if self.total_live() >= self.max_instances:
+            raise RuntimeError(
+                f"pool at max_instances={self.max_instances}")
+        tmpl = self._templates.get(model)
+        eng = ContinuousBatchingEngine(
+            self.configs[model], max_slots=self.max_slots,
+            max_seq=self.max_seq, seed=self.seed, share_from=tmpl)
+        if tmpl is None:
+            self._templates[model] = eng
+        inst = ModelInstance(self._next_iid, model, eng)
+        self._next_iid += 1
+        self.instances[model].append(inst)
+        inst.state = RUNNING  # engine construction == warm start
+        return inst
+
+    def drain(self, model: str, instance_id: Optional[int] = None) -> None:
+        """RUNNING → DRAINING: no new admissions; resident sequences run
+        to completion, then the sweep retires the instance."""
+        for inst in self.instances[model]:
+            if inst.state == RUNNING and (instance_id is None
+                                          or inst.instance_id == instance_id):
+                inst.state = DRAINING
+                if instance_id is not None:
+                    return
+
+    def scale_to(self, model: str, m_c: int) -> int:
+        """Set the RUNNING instance count for ``model`` (idempotent).
+
+        Scaling up revives DRAINING instances first (cheapest — their
+        engine is already warm), then spawns, clamped to the pool-wide
+        ``max_instances`` budget shared by all models. Scaling down
+        drains the least-loaded instances. Returns the RUNNING count
+        actually reached.
+        """
+        m_c = max(0, m_c)
+        run = self.running(model)
+        if len(run) > m_c:
+            for inst in sorted(run, key=lambda i: i.n_resident)[
+                    : len(run) - m_c]:
+                inst.state = DRAINING
+            return m_c
+        draining = [i for i in self.instances[model] if i.state == DRAINING]
+        while len(self.running(model)) < m_c and draining:
+            draining.pop(0).state = RUNNING  # revive
+        while len(self.running(model)) < m_c \
+                and self.total_live() < self.max_instances:
+            self.spawn(model)
+        return len(self.running(model))
+
+    def set_slot_cap(self, model: str, b: int) -> None:
+        """The b axis on a live engine: cap concurrently-active slots per
+        instance at ``min(b, max_slots)`` (engine slot count is fixed at
+        construction; the router enforces the cap at admission)."""
+        self.slot_caps[model] = max(1, min(b, self.max_slots))
+
+    def _sweep(self) -> None:
+        """DRAINING instances with no resident work → RETIRED; the engine
+        (its KV slot cache) is dropped so the memory really frees."""
+        for model, lst in self.instances.items():
+            keep = []
+            for inst in lst:
+                if inst.state == DRAINING and inst.n_resident == 0:
+                    inst.state = RETIRED
+                    inst.engine = None
+                    self.retired.append(inst)
+                else:
+                    keep.append(inst)
+            self.instances[model] = keep
+            if not keep:
+                # last instance gone: drop the shared weight/jit template
+                # so the model's memory really frees (live instances hold
+                # their own references, so this is always safe)
+                self._templates.pop(model, None)
+
+    # ---- router (docs/RUNTIME.md admission rules) ------------------------
+    def submit(self, model: str, prompt: np.ndarray, slo_ms: float = 1000.0,
+               max_new_tokens: int = 8,
+               submit_s: Optional[float] = None) -> int:
+        if model not in self.configs:
+            raise KeyError(f"unknown model {model!r}; "
+                           f"pool serves {sorted(self.configs)}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = PoolRequest(rid, model, np.asarray(prompt, np.int32), slo_ms,
+                          max_new_tokens,
+                          self.now() if submit_s is None else submit_s)
+        heapq.heappush(self.queues[model],
+                       (req.deadline_s, next(_seq), req))
+        return rid
+
+    def queue_len(self, model: str) -> int:
+        return len(self.queues[model])
+
+    def oldest_slack_ms(self, model: str) -> float:
+        """Remaining SLO budget of the most urgent waiting request."""
+        if not self.queues[model]:
+            return float("inf")
+        return (self.queues[model][0][0] - self.now()) * 1000.0
+
+    def _reject(self, req: PoolRequest) -> PoolResult:
+        now = self.now()
+        res = PoolResult(req.request_id, req.model, -1,
+                         np.zeros((0,), np.int32), req.submit_s, now, now,
+                         req.slo_ms, utility=0.0, rejected=True)
+        self.n_rejected += 1
+        self._results[req.model].append(res)
+        return res
+
+    def route(self) -> List[PoolResult]:
+        """Admit waiting requests, earliest absolute deadline first, into
+        the least-loaded RUNNING instance of their model; under
+        ``strict_admission`` requests that can no longer meet their
+        deadline are rejected instead of occupying a slot
+        (docs/RUNTIME.md admission rules). Returns the rejections."""
+        rejected: List[PoolResult] = []
+        now = self.now()
+        t1, c = self.contention()
+        for model, q in self.queues.items():
+            cap = self.slot_caps[model]
+            open_insts = [i for i in self.running(model)
+                          if cap - i.n_resident > 0]
+            while q:
+                deadline_s, _, req = q[0]
+                if self.strict_admission:
+                    hopeless = now > deadline_s
+                    if not hopeless and t1 > 0.0:
+                        need_ms = req.max_new_tokens * lm.predicted_iter_ms(
+                            t1, c, max(1, self.busy_count() + 1))
+                        hopeless = now + need_ms / 1000.0 > deadline_s
+                    if hopeless:
+                        heapq.heappop(q)
+                        rejected.append(self._reject(req))
+                        continue
+                if not open_insts:
+                    break
+                inst = max(open_insts, key=lambda i: cap - i.n_resident)
+                heapq.heappop(q)
+                erid = inst.engine.submit(req.prompt, req.max_new_tokens)
+                req.admit_s = now
+                inst.requests[erid] = req
+                self.admission_log.append((req.request_id,
+                                           inst.instance_id))
+                if cap - inst.n_resident <= 0:
+                    open_insts.remove(inst)
+        return rejected
+
+    # ---- iteration -------------------------------------------------------
+    def _finish(self, inst: ModelInstance, erid: int,
+                tokens: np.ndarray) -> PoolResult:
+        req = inst.requests.pop(erid)
+        now = self.now()
+        hist = self._results[req.model]
+        # throughput term of Eq. 3: this model's completions per second
+        # over a recent window (the streaming analogue of the simulator's
+        # per-session throughput); the window always spans at least this
+        # request's own lifetime so an empty history cannot fake an
+        # arbitrarily high rate
+        recent = [r.finish_s for r in hist[-32:] if not r.rejected] + [now]
+        span_s = max(now - min(recent), now - req.submit_s, 1e-3)
+        thr = len(recent) / span_s
+        u = utility(max(thr, 1e-3), max(now - req.submit_s, 1e-4),
+                    req.slo_ms / 1000.0, max(1, self.m_c(req.model)))
+        res = PoolResult(req.request_id, req.model, inst.instance_id,
+                         tokens, req.submit_s, req.admit_s, now, req.slo_ms,
+                         utility=u)
+        inst.n_served += 1
+        hist.append(res)
+        return res
+
+    def step(self) -> List[PoolResult]:
+        """One pool iteration: sweep retirements, route admissions, then
+        run ONE decode iteration on every busy live instance. Returns the
+        requests that finished (or were rejected) this iteration."""
+        self._sweep()
+        out: List[PoolResult] = list(self.route())
+        busy = [i for i in self.live()
+                if i.engine.active_slots or i.engine.waiting]
+        if not busy:
+            self.n_steps += 1
+            return out
+        # the latency a sequence experiences per decode token is the wall
+        # time of the WHOLE pool iteration (every busy instance steps once
+        # before any sequence advances again) — that is the quantity the
+        # contention model calibrates against the overlap level. Steps
+        # that prefill an admission are skipped: a prefill (or its first
+        # compile) costs orders of magnitude more than a decode iteration
+        # and would swamp the fit.
+        overlap = len(busy)
+        pure_decode = not any(i.engine.waiting for i in busy)
+        t0 = time.perf_counter()
+        for inst in busy:
+            for r in inst.engine.step():
+                out.append(self._finish(inst, r.request_id, r.tokens))
+        iter_ms = (time.perf_counter() - t0) * 1000.0
+        if pure_decode:
+            self.contention_samples.append((overlap, iter_ms))
+        if self.predictor is not None and pure_decode:
+            for inst in busy:
+                self.predictor.observe(
+                    engine_features(self.configs[inst.model],
+                                    self.m_c(inst.model),
+                                    inst.n_resident, overlap),
+                    iter_ms / 1000.0)
+        self.n_steps += 1
+        return out
+
+    def run_until_drained(self, max_steps: int = 10_000
+                          ) -> List[PoolResult]:
+        """Step until every queue and instance is empty (tests/benchmarks;
+        the serving loop calls ``step()`` directly)."""
+        done: List[PoolResult] = []
+        while max_steps > 0 and (
+                any(self.queues.values())
+                or any(i.n_resident for i in self.live())):
+            done.extend(self.step())
+            max_steps -= 1
+        self._sweep()
+        return done
+
+    def warmup(self, prompt_lens: Tuple[int, ...] = (8, 20),
+               seed: int = 0) -> None:
+        """Compile the serving shapes before traffic: one prompt per
+        length bucket per model (at an effectively-infinite SLO), drained
+        to completion, then metrics reset — so neither compile time nor
+        the warmup traffic pollutes SLO stats or the contention fit.
+        Callers scale first; models at m_c = 0 are skipped."""
+        rng = np.random.default_rng(seed)
+        submitted = False
+        for m, cfg in self.configs.items():
+            if self.m_c(m) == 0:
+                continue
+            for n in prompt_lens:
+                self.submit(m, rng.integers(1, cfg.vocab_size, n).astype(
+                    np.int32), slo_ms=600_000.0, max_new_tokens=2)
+                submitted = True
+        if submitted:
+            self.run_until_drained()
+        self.reset_metrics()
+
+    # ---- accounting ------------------------------------------------------
+    def reset_metrics(self) -> None:
+        """Clear serving metrics (results, admission log, counters,
+        calibration samples) but keep instances and warm jit caches —
+        called after a warmup pass so compile time pollutes neither the
+        SLO stats nor the contention fit."""
+        self._results = {m: [] for m in self.configs}
+        self.admission_log = []
+        self.contention_samples = []
+        self.n_rejected = 0
+        self.n_steps = 0
+        for lst in self.instances.values():
+            for inst in lst:
+                inst.n_served = 0
+        self._t0 = time.perf_counter()
+
+    def contention(self) -> Tuple[float, float]:
+        """Calibrated ``(t1_ms, c)`` from the measured samples
+        (``latency_model.fit_contention``); ``(0, 0)`` before warmup."""
+        if len(self.contention_samples) < 8:
+            return 0.0, 0.0
+        return lm.fit_contention(self.contention_samples[-512:])
+
+    def slot_ms(self, model: str) -> float:
+        """Eq. 1 for the live allocation: t_i = Σ SLO of the model's
+        resident requests / m_c. The PoolScheduler re-decides once per
+        slot (docs/RUNTIME.md Eq.-1 accounting)."""
+        slo_sum = sum(i.slo_sum_ms for i in self.instances[model]
+                      if i.state in (RUNNING, DRAINING))
+        return slo_sum / max(1, self.m_c(model))
+
+    def results(self, model: str) -> List[PoolResult]:
+        """All finished/rejected results for ``model`` so far."""
+        return list(self._results[model])
+
+    def states(self, model: str) -> List[str]:
+        return [i.state for i in self.instances[model]] + \
+            [i.state for i in self.retired if i.model == model]
+
+    def report(self) -> Dict[str, Dict[str, float]]:
+        """Per-model serving metrics over the pool's lifetime."""
+        out: Dict[str, Dict[str, float]] = {}
+        for model, results in self._results.items():
+            served = [r for r in results if not r.rejected]
+            viol = sum(1 for r in results if r.violated)
+            lats = [r.latency_ms for r in served]
+            out[model] = {
+                "served": float(len(served)),
+                "rejected": float(len(results) - len(served)),
+                "violations": float(viol),
+                "slo_attainment": 1.0 - viol / max(1, len(results)),
+                "mean_latency_ms": float(np.mean(lats)) if lats else 0.0,
+                "mean_utility": float(np.mean(
+                    [r.utility for r in served])) if served else 0.0,
+                "m_c": float(self.m_c(model)),
+                "queued": float(len(self.queues[model])),
+            }
+        return out
+
+    def stats(self) -> Dict[str, float]:
+        t1, c = self.contention()
+        return {
+            "n_steps": float(self.n_steps),
+            "live_instances": float(self.total_live()),
+            "retired_instances": float(len(self.retired)),
+            "n_rejected": float(self.n_rejected),
+            "contention_t1_ms": t1,
+            "contention_c": c,
+        }

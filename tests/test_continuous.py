@@ -91,6 +91,20 @@ def test_engine_rejects_oversized_prompt():
         eng.submit(np.arange(1, 40, dtype=np.int32))
 
 
+def test_bucket_rejects_overlength_prompt():
+    """Regression: _bucket silently clamped n > buckets[-1] to the
+    largest bucket, so submit() under-counted S and its cache-fit check
+    passed for prompts that do not actually fit the cache."""
+    from repro.serving.engine import SEQ_BUCKETS, _bucket
+    assert _bucket(512, buckets=SEQ_BUCKETS) == 512
+    with pytest.raises(ValueError):
+        _bucket(513, buckets=SEQ_BUCKETS)
+    eng = ContinuousBatchingEngine(TINY, max_slots=1, max_seq=1024)
+    with pytest.raises(ValueError):
+        # would have been admitted pre-fix (clamped S=512 "fits" 1024)
+        eng.submit(np.arange(1, 601, dtype=np.int32) % 97)
+
+
 def test_engine_rejects_enc_dec():
     import dataclasses
     enc = dataclasses.replace(TINY, name="tiny-ed", enc_dec=True,
