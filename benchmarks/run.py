@@ -25,6 +25,8 @@ MODULES = [
     "fig14_15_slo",
     "fig16_overhead",
     "fig_continuous_vs_round",
+    "fig_multimodel_concurrency",
+    "fig_paged_kv",
     "roofline_table",
 ]
 

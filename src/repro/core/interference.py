@@ -64,7 +64,13 @@ class NNInterferencePredictor:
         self._count = 0
 
     def _norm(self, X: np.ndarray) -> np.ndarray:
-        return (X - self._mu) / np.sqrt(self._var + 1e-6)
+        # winsorize: feature dims the training data barely varied (e.g.
+        # model-specific footprints when one model dominates the
+        # samples) otherwise normalise to huge values for other models,
+        # and the MLP saturates at its output clip instead of falling
+        # back on the dims it did learn (b, m_c, utilisation)
+        z = (X - self._mu) / np.sqrt(self._var + 1e-6)
+        return np.clip(z, -6.0, 6.0)
 
     def _update_stats(self, X: np.ndarray) -> None:
         X = np.atleast_2d(X)

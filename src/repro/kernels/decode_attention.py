@@ -6,6 +6,17 @@ scratch. Cache blocks stream HBM->VMEM; the query row and accumulator stay
 resident. Invalid cache slots (ring-buffer holes, unwritten tail) are
 masked via the ``valid`` operand, which also carries per-row positions so
 the same kernel serves linear and ring caches.
+
+Two cache layouts share the same online-softmax body:
+
+* ``decode_attention``        — dense (B, C, KV, hd) per-slot caches.
+* ``paged_decode_attention``  — vLLM-style block pool (N, bs, KV, hd)
+  indirected through a per-sequence **block table** (docs/ARCHITECTURE.md
+  §5): the grid sweeps *logical* blocks and the block table, scalar-
+  prefetched so the index map can resolve logical→physical before the
+  DMA is issued, picks the physical pool block to stream. The ragged
+  tail is masked from per-sequence lengths (the paged counterpart of the
+  ``valid`` operand).
 """
 from __future__ import annotations
 
@@ -95,4 +106,94 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
         interpret=interpret,
     )(qt, kt, vt, val)
+    return jnp.moveaxis(out, 1, 2)
+
+
+def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale: float,
+                         block_size: int, n_blocks: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (1, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+    # ragged tail: logical slot j*bs + i is valid iff < seq_len[b]
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1) \
+        + j * block_size
+    valid = slot < len_ref[b]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1,bs)
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           seq_lens: jax.Array, scale: float, *,
+                           interpret: bool = False) -> jax.Array:
+    """Flash-decoding over a paged KV pool.
+
+    q (B,1,H,hd); k_pool/v_pool (N, bs, KV, hd) physical blocks;
+    block_tables (B, nb) int32 — logical block j of sequence b lives in
+    physical block ``block_tables[b, j]`` (unused entries may hold any
+    valid pool index; they are masked); seq_lens (B,) int32 — number of
+    valid logical slots per sequence. Returns (B,1,H,hd).
+    """
+    B, _, H, hd = q.shape
+    bs = k_pool.shape[1]
+    KV = k_pool.shape[2]
+    qpk = H // KV
+    nb = block_tables.shape[1]
+    qt = jnp.moveaxis(q, 2, 1)  # (B,H,1,hd)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               block_size=bs, n_blocks=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, seq_lens
+        grid=(B, H, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, tbl, lens, _qpk=qpk:
+                         (tbl[b, j], 0, h // _qpk, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, tbl, lens, _qpk=qpk:
+                         (tbl[b, j], 0, h // _qpk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd),
+                               lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      qt, k_pool, v_pool)
     return jnp.moveaxis(out, 1, 2)

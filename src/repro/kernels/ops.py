@@ -13,6 +13,8 @@ import jax
 
 from repro.kernels import ref  # noqa: F401  (re-exported for tests)
 from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.decode_attention import (
+    paged_decode_attention as _paged_decode)
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.moe_matmul import moe_matmul as _moe
 from repro.kernels.rglru_scan import rglru_scan as _rglru
@@ -37,6 +39,12 @@ def flash_attention(q, k, v, *, positions=None, window: Optional[int] = None,
 def decode_attention(q, k, v, valid, scale: float, block_c: int = 512):
     return _decode(q, k, v, valid, scale, block_c=block_c,
                    interpret=_interpret())
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, seq_lens,
+                           scale: float):
+    return _paged_decode(q, k_pool, v_pool, block_tables, seq_lens, scale,
+                         interpret=_interpret())
 
 
 def rwkv6_scan(r, k, v, w, u, state, chunk: int = 64):

@@ -46,6 +46,22 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, 1, H, hd).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_tables: jax.Array,
+                               seq_lens: jax.Array,
+                               scale: float) -> jax.Array:
+    """q (B,1,H,hd); k/v pools (N,bs,KV,hd); block_tables (B,nb) int32;
+    seq_lens (B,) valid logical slots -> (B,1,H,hd). Gathers the logical
+    view then defers to :func:`decode_attention_ref`."""
+    B = q.shape[0]
+    nb = block_tables.shape[1]
+    bs = k_pool.shape[1]
+    k = k_pool[block_tables].reshape((B, nb * bs) + k_pool.shape[2:])
+    v = v_pool[block_tables].reshape((B, nb * bs) + v_pool.shape[2:])
+    valid = jnp.arange(nb * bs)[None, :] < seq_lens[:, None]
+    return decode_attention_ref(q, k, v, valid, scale)
+
+
 def rwkv6_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
                    u: jax.Array, state: jax.Array):
     """All of r/k/v/w: (B,S,H,hd) f32; u (H,hd); state (B,H,hd,hd).

@@ -109,14 +109,19 @@ def serve_round(arch: str = "qwen3-0.6b", duration_s: float = 20.0,
 
 def serve_continuous(arch: str = "qwen3-0.6b", duration_s: float = 20.0,
                      rps: float = 12.0, slo_ms: float = 1500.0,
-                     max_slots: int = 4) -> None:
+                     max_slots: int = 4, kv_layout: str = "dense",
+                     kv_block_budget: Optional[int] = None) -> None:
     """Continuous mode: arrivals are submitted into the slot engine as
-    they land and join the running batch at iteration boundaries."""
+    they land and join the running batch at iteration boundaries. With
+    ``kv_layout="paged"``, ``kv_block_budget`` caps the engine's block
+    pool (default: the dense-equivalent worst case)."""
     cfg = get_reduced_config(arch)
     print(f"loading reduced {cfg.name} "
           f"(d={cfg.d_model}, L={cfg.n_layers}), "
-          f"{max_slots} slots...")
-    engine = ContinuousBatchingEngine(cfg, max_slots=max_slots, max_seq=128)
+          f"{max_slots} slots, {kv_layout} KV...")
+    engine = ContinuousBatchingEngine(cfg, max_slots=max_slots, max_seq=128,
+                                      kv_layout=kv_layout,
+                                      kv_blocks=kv_block_budget)
     rng = np.random.default_rng(0)
 
     t0 = time.perf_counter()
@@ -150,12 +155,16 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
                duration_s: float = 20.0, rps: float = 12.0,
                slo_ms: float = 2000.0, max_instances: int = 4,
                max_slots: int = 4, max_new_tokens: int = 4,
-               control_ms: float = 500.0, seed: int = 0
+               control_ms: float = 500.0, seed: int = 0,
+               kv_layout: str = "dense",
+               kv_block_budget: Optional[int] = None
                ) -> Dict[str, Dict[str, float]]:
     """Multi-model pool serve (docs/RUNTIME.md): Poisson arrivals per
     model are routed by deadline into a ``ModelInstancePool`` of live
     engine instances while the ``PoolScheduler`` re-decides (b, m_c) per
     model once per Eq.-1 slot (clamped to [control_ms, 2000] ms).
+    ``kv_layout="paged"`` serves every instance from the block-pool KV
+    layout under a shared ``kv_block_budget`` (docs/RUNTIME.md §7).
     Returns the pool's per-model report."""
     cfgs = {m: get_reduced_config(m) for m in models}
     for m, cfg in cfgs.items():
@@ -164,7 +173,9 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
     pool = ModelInstancePool(cfgs, max_instances=max_instances,
                              max_slots=max_slots, max_seq=128, seed=seed,
                              strict_admission=True,
-                             predictor=NNInterferencePredictor(seed=seed))
+                             predictor=NNInterferencePredictor(seed=seed),
+                             kv_layout=kv_layout,
+                             kv_block_budget=kv_block_budget)
     per_model_mc = max(1, max_instances // max(1, len(cfgs)))
     scfg = ServingConfig(
         batch_sizes=tuple(b for b in (1, 2, 4, 8) if b <= max_slots),
@@ -224,16 +235,23 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
 def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
          duration_s: float = 20.0, rps: float = 12.0,
          slo_ms: float = 1500.0, models: Optional[Sequence[str]] = None,
-         max_instances: int = 4) -> None:
+         max_instances: int = 4, kv_layout: str = "dense",
+         kv_block_budget: Optional[int] = None) -> None:
     if models:
         if exec_mode != "continuous":
             print("multi-model pool serving is continuous-only; "
                   "running with --exec-mode continuous")
         serve_pool(models, duration_s, rps, slo_ms,
-                   max_instances=max_instances)
+                   max_instances=max_instances, kv_layout=kv_layout,
+                   kv_block_budget=kv_block_budget)
     elif exec_mode == "continuous":
-        serve_continuous(arch, duration_s, rps, slo_ms)
+        serve_continuous(arch, duration_s, rps, slo_ms,
+                         kv_layout=kv_layout,
+                         kv_block_budget=kv_block_budget)
     else:
+        if kv_layout != "dense":
+            print("round mode always uses the dense per-round cache; "
+                  "--kv-layout applies to continuous/pool serving")
         serve_round(arch, duration_s, rps, slo_ms)
 
 

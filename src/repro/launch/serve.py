@@ -43,6 +43,15 @@ def main() -> None:
     ap.add_argument("--max-instances", type=int, default=4,
                     help="pool-wide live engine instance budget shared "
                          "by all --models")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="continuous-engine KV cache layout: dense "
+                         "per-slot slabs or the vLLM-style block pool "
+                         "(docs/ARCHITECTURE.md §5)")
+    ap.add_argument("--kv-block-budget", type=int, default=None,
+                    help="total KV blocks shared by all pool instances "
+                         "(paged only; default: unlimited, each "
+                         "instance gets its dense-equivalent grant)")
     args = ap.parse_args()
 
     if args.models and not args.engine:
@@ -54,7 +63,9 @@ def main() -> None:
 
         models = [m for m in (args.models or "").split(",") if m] or None
         engine_serve.main(exec_mode=args.exec_mode, arch=args.arch,
-                          models=models, max_instances=args.max_instances)
+                          models=models, max_instances=args.max_instances,
+                          kv_layout=args.kv_layout,
+                          kv_block_budget=args.kv_block_budget)
         return
 
     from repro.config.base import ServingConfig

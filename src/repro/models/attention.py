@@ -150,6 +150,25 @@ def kv_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> Dict:
             "v": jax.ShapeDtypeStruct(shp, dtype)}
 
 
+def init_paged_kv_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                        dtype) -> Dict:
+    """Block-pool KV layout (docs/ARCHITECTURE.md §5): one physical pool
+    of ``n_blocks`` blocks of ``block_size`` tokens shared by every
+    sequence, indirected through per-sequence block tables. Block 0 is
+    conventionally the *null block* (sink for inactive batch rows)."""
+    hd = cfg.head_dim
+    shp = (n_blocks, block_size, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def paged_kv_cache_spec(cfg: ModelConfig, n_blocks: int, block_size: int,
+                        dtype) -> Dict:
+    hd = cfg.head_dim
+    shp = (n_blocks, block_size, cfg.n_kv_heads, hd)
+    return {"k": jax.ShapeDtypeStruct(shp, dtype),
+            "v": jax.ShapeDtypeStruct(shp, dtype)}
+
+
 def _write_cache(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
     """cache (B,C,KV,hd), new (B,1,KV,hd), slot (B,) -> updated cache."""
 
@@ -157,6 +176,53 @@ def _write_cache(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array
         return jax.lax.dynamic_update_slice(c, n, (s, 0, 0))
 
     return jax.vmap(row)(cache, new, slot)
+
+
+def _write_paged(pool: jax.Array, new: jax.Array, tables: jax.Array,
+                 pos: jax.Array) -> jax.Array:
+    """pool (N,bs,KV,hd); new (B,1,KV,hd); tables (B,nb); pos (B,).
+
+    Scatter each sequence's new K/V row into physical slot
+    ``tables[b, pos//bs] * bs + pos % bs``. Distinct live sequences own
+    distinct blocks, so the only colliding writes are inactive rows
+    aimed at the null block — last-write-wins there is harmless because
+    null-block contents are never read as valid."""
+    N, bs = pool.shape[0], pool.shape[1]
+    B = new.shape[0]
+    flat = pool.reshape((N * bs,) + pool.shape[2:])
+    phys = tables[jnp.arange(B), pos // bs] * bs + pos % bs
+    flat = flat.at[phys].set(new[:, 0])
+    return flat.reshape(pool.shape)
+
+
+def attention_decode_paged(p: Dict, x: jax.Array, cache: Dict,
+                           tables: jax.Array, pos: jax.Array,
+                           cfg: ModelConfig, *, impl: str = "auto"
+                           ) -> Tuple[jax.Array, Dict]:
+    """Paged-counterpart of :func:`attention_decode` for linear
+    (non-windowed) layers: the new K/V is scattered through the block
+    table and the query attends the gathered logical view. Attended
+    positions are exactly ``slots <= pos`` — the same set the dense
+    layout attends — so greedy decode is token-identical across
+    layouts."""
+    B = x.shape[0]
+    nb = tables.shape[1]
+    bs = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos[:, None])
+    cache = {"k": _write_paged(cache["k"], k_new, tables, pos),
+             "v": _write_paged(cache["v"], v_new, tables, pos)}
+    scale = 1.0 / float(cfg.head_dim) ** 0.5
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+
+        out = kops.paged_decode_attention(q, cache["k"], cache["v"],
+                                          tables, pos + 1, scale)
+    else:
+        k = cache["k"][tables].reshape((B, nb * bs) + cache["k"].shape[2:])
+        v = cache["v"][tables].reshape((B, nb * bs) + cache["v"].shape[2:])
+        valid = jnp.arange(nb * bs, dtype=jnp.int32)[None, :] <= pos[:, None]
+        out = _sdpa(q, k, v, valid[:, None, :], scale)
+    return out.reshape(B, 1, -1) @ p["wo"], cache
 
 
 def attention_decode(p: Dict, x: jax.Array, cache: Dict, pos: jax.Array,

@@ -166,9 +166,17 @@ def _layer_decode(p: Dict, x: jax.Array, cfg: ModelConfig, kind: str,
         new_cache = new_state
     else:
         h = apply_norm(p["attn_norm"], x, cfg.norm)
-        out, kv = attn.attention_decode(
-            p["attn"], h, {"k": cache["k"], "v": cache["v"]}, ctx["pos"],
-            cfg, window=window, impl=ctx["attn_impl"])
+        tables = ctx.get("block_tables")
+        if tables is not None and window is None:
+            # paged layout covers linear KV layers only; ring buffers
+            # (windowed) are already bounded by the window and stay dense
+            out, kv = attn.attention_decode_paged(
+                p["attn"], h, {"k": cache["k"], "v": cache["v"]}, tables,
+                ctx["pos"], cfg, impl=ctx["attn_impl"])
+        else:
+            out, kv = attn.attention_decode(
+                p["attn"], h, {"k": cache["k"], "v": cache["v"]},
+                ctx["pos"], cfg, window=window, impl=ctx["attn_impl"])
         x = x + out
         new_cache = dict(kv)
         if cfg.enc_dec and "cross" in p:
@@ -375,8 +383,19 @@ def _xent_chunked(params: Dict, x: jax.Array, labels: jax.Array,
 # =====================================================================
 # cache construction
 # =====================================================================
+def paged_layer_kind(cfg: ModelConfig, kind: str) -> bool:
+    """True when ``kind``'s decode cache uses the block-pool layout under
+    a paged cache: linear (non-windowed) attention KV only. Recurrent
+    states are O(1) per sequence and ring buffers are bounded by their
+    window, so both stay per-slot dense."""
+    if kind in ("rwkv", "rglru") or cfg.enc_dec:
+        return False
+    return _window_for(cfg, kind) is None
+
+
 def _layer_cache_spec(cfg: ModelConfig, kind: str, batch: int,
-                      cache_len: int, dtype, abstract: bool) -> Dict:
+                      cache_len: int, dtype, abstract: bool,
+                      paged: Optional[Tuple[int, int]] = None) -> Dict:
     window = _window_for(cfg, kind)
     if kind == "rwkv":
         fn = rk.rwkv_state_spec if abstract else rk.rwkv_state_init
@@ -384,6 +403,10 @@ def _layer_cache_spec(cfg: ModelConfig, kind: str, batch: int,
     if kind == "rglru":
         fn = rg.rglru_state_spec if abstract else rg.rglru_state_init
         return fn(cfg, batch, dtype)
+    if paged is not None and paged_layer_kind(cfg, kind):
+        n_blocks, block_size = paged
+        fn = attn.paged_kv_cache_spec if abstract else attn.init_paged_kv_cache
+        return fn(cfg, n_blocks, block_size, dtype)
     clen = min(cache_len, window) if window is not None else cache_len
     fn = attn.kv_cache_spec if abstract else attn.init_kv_cache
     c = fn(cfg, batch, clen, dtype)
@@ -413,7 +436,12 @@ def pad_cache(cfg: ModelConfig, cache: Dict, extra: int) -> Dict:
     """Extend linear (non-windowed) KV caches by ``extra`` slots so a
     prefill cache of S entries can absorb decode writes at S..S+extra-1.
     Ring buffers (windowed layers) and recurrent states are fixed-size and
-    pass through untouched. Cross-attention K/V is static."""
+    pass through untouched. Cross-attention K/V is static.
+
+    Paged caches never come through here: a block pool has no length
+    axis to pad — capacity grows by *allocating blocks*
+    (``scatter_blocks`` + the engine's ``BlockAllocator``), which is the
+    whole point of the layout."""
     n_units, tail_kinds = _split_layers(cfg)
 
     def pad_layer(kind: str, c: Dict, stacked: bool) -> Dict:
@@ -440,21 +468,80 @@ def pad_cache(cfg: ModelConfig, cache: Dict, extra: int) -> Dict:
 
 
 def make_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype,
-               abstract: bool = False) -> Dict:
+               abstract: bool = False,
+               paged: Optional[Tuple[int, int]] = None) -> Dict:
+    """Decode-cache pytree for ``batch`` slots of ``cache_len`` tokens.
+
+    ``paged=(n_blocks, block_size)`` switches linear attention KV layers
+    to the block-pool layout ``(n_blocks, block_size, KV, hd)`` shared by
+    all slots (docs/ARCHITECTURE.md §5); windowed ring buffers and
+    recurrent states keep their per-slot dense layout in both modes.
+    """
+    if paged is not None and cfg.enc_dec:
+        raise NotImplementedError(
+            "paged KV caches do not support encoder-decoder models")
     n_units, tail_kinds = _split_layers(cfg)
     cache: Dict[str, Any] = {}
     if n_units:
         units = []
         for kind in cfg.block_pattern:
             per = [_layer_cache_spec(cfg, kind, batch, cache_len, dtype,
-                                     abstract) for _ in range(n_units)]
+                                     abstract, paged)
+                   for _ in range(n_units)]
             units.append(_stack_spec(per))
         cache["units"] = tuple(units)
     if tail_kinds:
         cache["tail"] = tuple(
-            _layer_cache_spec(cfg, kind, batch, cache_len, dtype, abstract)
+            _layer_cache_spec(cfg, kind, batch, cache_len, dtype, abstract,
+                              paged)
             for kind in tail_kinds)
     return cache
+
+
+# =====================================================================
+# block-granular cache surgery (paged layout)
+# =====================================================================
+def gather_blocks(pool: jax.Array, block_ids: jax.Array) -> jax.Array:
+    """Pure gather: pool (N, bs, ...) + ids (n,) -> (n*bs, ...) logical
+    rows in block-table order."""
+    bs = pool.shape[1]
+    n = block_ids.shape[0]
+    return pool[block_ids].reshape((n * bs,) + pool.shape[2:])
+
+
+def _rows_to_blocks(rows: jax.Array, n: int, bs: int) -> jax.Array:
+    """Fold a token axis (third-from-last, length T <= n*bs) into
+    (n, bs) blocks, zero-padding the ragged tail of the last block."""
+    pad = n * bs - rows.shape[-3]
+    if pad < 0:
+        raise ValueError(
+            f"{rows.shape[-3]} rows exceed {n} blocks of {bs}")
+    if pad:
+        widths = [(0, 0)] * rows.ndim
+        widths[-3] = (0, pad)
+        rows = jnp.pad(rows, widths)
+    return rows.reshape(rows.shape[:-3] + (n, bs) + rows.shape[-2:])
+
+
+def scatter_blocks(pool: jax.Array, rows: jax.Array,
+                   block_ids: jax.Array) -> jax.Array:
+    """Pure scatter: write ``rows`` (T, ...) with T <= n*bs into physical
+    blocks ``block_ids`` (n,) of ``pool`` (N, bs, ...), zero-padding the
+    ragged tail of the last block. This is the block-granular primitive
+    prefill grafting is built from — the paged analogue of the dense
+    engines' row scatter."""
+    blocks = _rows_to_blocks(rows, block_ids.shape[0], pool.shape[1])
+    return pool.at[block_ids].set(blocks)
+
+
+def scatter_blocks_stacked(pool: jax.Array, rows: jax.Array,
+                           block_ids: jax.Array) -> jax.Array:
+    """:func:`scatter_blocks` for scan-stacked unit caches: pool
+    (U, N, bs, ...), rows (U, T, ...) — the same physical blocks written
+    in every unit's pool (direct indexed scatter; a vmap here would
+    retrace on every admission)."""
+    blocks = _rows_to_blocks(rows, block_ids.shape[0], pool.shape[2])
+    return pool.at[:, block_ids].set(blocks)
 
 
 # =====================================================================
@@ -529,11 +616,13 @@ class Model:
 
     # ---- forward: decode -----------------------------------------------
     def decode_step(self, params, cache, batch):
-        """batch = {"tokens": (B,1), "pos": (B,)}; returns (logits, cache)."""
+        """batch = {"tokens": (B,1), "pos": (B,)} plus, for paged caches,
+        "block_tables": (B, nb) int32; returns (logits, cache)."""
         cfg = self.cfg
         params = self._cast(params)
         x = apply_embed(params["embed"], batch["tokens"])
-        ctx = {"pos": batch["pos"], "attn_impl": self.attn_impl}
+        ctx = {"pos": batch["pos"], "attn_impl": self.attn_impl,
+               "block_tables": batch.get("block_tables")}
         x, new_cache = _trunk_decode(params, x, cfg, cache, ctx)
         logits = _lm_logits(params, x, cfg)
         return logits, new_cache
@@ -544,6 +633,19 @@ class Model:
 
     def cache_spec(self, batch: int, cache_len: int, dtype=jnp.float32):
         return make_cache(self.cfg, batch, cache_len, dtype, abstract=True)
+
+    def init_paged_cache(self, batch: int, cache_len: int, n_blocks: int,
+                         block_size: int, dtype=jnp.float32):
+        """Paged decode cache: linear-attention KV in a shared
+        ``(n_blocks, block_size, KV, hd)`` pool, windowed/recurrent state
+        per-slot dense at ``batch`` slots (docs/ARCHITECTURE.md §5)."""
+        return make_cache(self.cfg, batch, cache_len, dtype,
+                          abstract=False, paged=(n_blocks, block_size))
+
+    def paged_cache_spec(self, batch: int, cache_len: int, n_blocks: int,
+                         block_size: int, dtype=jnp.float32):
+        return make_cache(self.cfg, batch, cache_len, dtype,
+                          abstract=True, paged=(n_blocks, block_size))
 
     # ---- input specs (dry-run stand-ins) ---------------------------------
     def input_specs(self, shape: InputShape, dtype=jnp.float32) -> Dict:

@@ -186,8 +186,9 @@ def run_episode(env: EdgeServingEnv, agent,
 
 #: state vector fed to the per-model pool agents (docs/RUNTIME.md):
 #: [log1p(queue), oldest slack s, own m_c share, total live share,
-#:  log1p(predicted iter ms), log1p(Eq.-1 slot ms)]
-POOL_STATE_DIM = 6
+#:  log1p(predicted iter ms), log1p(Eq.-1 slot ms),
+#:  KV budget headroom frac (1.0 for dense/unlimited pools)]
+POOL_STATE_DIM = 7
 
 
 class PoolScheduler:
@@ -244,6 +245,17 @@ class PoolScheduler:
         pred = lm.predicted_iter_ms(t1, c, max(1, p.total_live()))
         slack = p.oldest_slack_ms(model)
         slack = min(slack, 10_000.0)
+        occ = p.kv_occupancy()
+        headroom = 1.0
+        if occ["budget_tokens"] > 0.0:
+            # the budget is consumed by BOTH live token residency and
+            # committed spawn grants (an idle instance still holds its
+            # grant, so scaling up can be blocked at used_tokens ~ 0);
+            # report the tighter of the two so the agent sees the
+            # binding constraint
+            committed = occ["committed_blocks"] * p.block_size
+            headroom = max(0.0, 1.0 - max(occ["used_tokens"], committed)
+                           / occ["budget_tokens"])
         return np.array([
             np.log1p(p.queue_len(model)),
             slack / 1000.0,
@@ -251,15 +263,42 @@ class PoolScheduler:
             p.total_live() / max(1, p.max_instances),
             np.log1p(max(pred, 0.0)),
             np.log1p(max(p.slot_ms(model), 0.0)),
+            headroom,
         ], np.float32)
 
-    def _feasible(self, model: str, m_c: int) -> bool:
+    def _kv_feasible(self, model: str, b: int, m_c: int) -> bool:
+        """Eq.-4 (memory) feasibility against the pool's REAL shared KV
+        block budget: the proposed allocation's predicted resident
+        tokens — b slots × m_c instances at the MEASURED tokens/sequence
+        (``latency_model.fit_occupancy``) — plus what the other tenants
+        measurably occupy must fit the budget. Dense pools / unlimited
+        budgets / uncalibrated occupancy default to feasible (the
+        analytic curve never blocked the real runtime either).
+
+        This is the *demand* side of Eq. 4; the *allocation* side
+        (committed spawn grants) is enforced physically by
+        ``pool.scale_to``/``can_spawn`` clamping on free blocks, and is
+        surfaced to the agent via the headroom state feature."""
+        occ = self.pool.kv_occupancy()
+        budget = occ["budget_tokens"]
+        tps = occ["tokens_per_seq"]
+        if budget <= 0.0 or tps <= 0.0:
+            return True
+        used_others = occ["used_tokens"] - self.pool.kv_used_tokens(model)
+        need = lm.predicted_kv_tokens(tps, b * m_c)
+        return need + used_others <= budget
+
+    def _feasible(self, model: str, b: int, m_c: int) -> bool:
         """Eq.-1 feasibility per iteration at the PROPOSED overlap: the
         calibrated contention model's predicted pool-iteration latency
         must fit the most urgent request's per-iteration budget. The
         prediction counts BUSY instances (what the samples are recorded
-        against) at the proposed concurrency; the b axis does not enter
-        the contention model, so feasibility only constrains m_c."""
+        against) at the proposed concurrency. The b axis does not enter
+        the contention model, but it does enter the KV-budget guard
+        (``_kv_feasible``), the real-occupancy counterpart of the
+        simulator's Eq.-4 memory check."""
+        if not self._kv_feasible(model, b, m_c):
+            return False
         t1, c = self.pool.contention()
         if t1 <= 0.0:
             return True  # not calibrated yet: trust the agent
@@ -279,15 +318,21 @@ class PoolScheduler:
         # simulator path: only throughput clears an old queue)
         slo = self.slo_ms.get(model, 1000.0)
         backlog = self.pool.oldest_slack_ms(model) < 0.5 * slo
-        if self.guard and not backlog and not self._feasible(model, m_c):
+        if self.guard and not backlog and not self._feasible(model, b, m_c):
             self.guard_interventions += 1
+            bs_levels = list(cfg.batch_sizes)
             ms = list(cfg.concurrency_levels)
-            mi = ms.index(m_c)
-            while mi > 0:
-                mi -= 1  # concurrency is what contends; b stays as chosen
-                if self._feasible(model, ms[mi]):
+            bi, mi = bs_levels.index(b), ms.index(m_c)
+            # degrade concurrency first (it both contends and multiplies
+            # KV residency), then batch
+            while mi > 0 or bi > 0:
+                if mi > 0:
+                    mi -= 1
+                elif bi > 0:
+                    bi -= 1
+                if self._feasible(model, bs_levels[bi], ms[mi]):
                     break
-            m_c = ms[mi]
+            b, m_c = bs_levels[bi], ms[mi]
         self.pool.set_slot_cap(model, b)
         self.pool.scale_to(model, m_c)
         return cfg.pair_to_action(b, m_c)

@@ -31,7 +31,9 @@ import numpy as np
 
 from repro.config.base import ModelConfig
 from repro.models import build_model
-from repro.models.transformer import pad_cache
+from repro.models.transformer import (_split_layers, pad_cache,
+                                      paged_layer_kind, scatter_blocks,
+                                      scatter_blocks_stacked)
 
 
 def _bucket(n: int, buckets=(1, 2, 4, 8, 16, 32, 64, 128)) -> int:
@@ -143,6 +145,66 @@ class InferenceEngine:
 # =====================================================================
 # continuous (iteration-level) batching
 # =====================================================================
+class BlockAllocator:
+    """Free-list allocator over a paged KV block pool
+    (docs/ARCHITECTURE.md §5).
+
+    ``n_blocks`` usable blocks of ``block_size`` tokens; physical ids are
+    1..n_blocks (id 0 is the null block inactive batch rows write into,
+    never handed out). Admission *reserves* a sequence's worst-case block
+    count up front, so the lazy per-decode-boundary ``alloc_reserved``
+    can never fail mid-sequence; eviction returns blocks to the free
+    list and cancels the unfilled remainder of the reservation.
+
+    Invariants (asserted in tests/test_paged_kv.py):
+      * ``n_free - n_reserved == n_available >= 0`` at all times;
+      * every id is either free or owned by exactly one slot;
+      * the null block 0 is never allocated.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 1:
+            raise ValueError("need at least one usable block")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free = list(range(n_blocks, 0, -1))  # pop() -> low ids first
+        self.n_reserved = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_available(self) -> int:
+        """Blocks neither allocated nor promised to an admitted slot."""
+        return len(self._free) - self.n_reserved
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-max(0, n_tokens) // self.block_size)
+
+    def reserve(self, n: int) -> bool:
+        """Promise ``n`` blocks to a sequence; False when they are not
+        available (the caller keeps the request queued)."""
+        if self.n_available < n:
+            return False
+        self.n_reserved += n
+        return True
+
+    def unreserve(self, n: int) -> None:
+        assert 0 <= n <= self.n_reserved
+        self.n_reserved -= n
+
+    def alloc_reserved(self) -> int:
+        """Convert one previously reserved block into a physical id."""
+        assert self.n_reserved > 0, "alloc without reservation"
+        self.n_reserved -= 1
+        return self._free.pop()
+
+    def free(self, ids: List[int]) -> None:
+        assert all(0 < i <= self.n_blocks for i in ids)
+        self._free.extend(ids)
+
+
 @dataclasses.dataclass
 class _Slot:
     """One KV-cache slot: the sequence currently decoding in batch row i."""
@@ -152,6 +214,10 @@ class _Slot:
     tokens: List[int] = dataclasses.field(default_factory=list)
     submit_s: float = 0.0
     admit_s: float = 0.0
+    # paged layout only: physical blocks owned, and how many of the
+    # admission reservation remain unallocated (alloc-on-decode-boundary)
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    n_outstanding: int = 0
 
     @property
     def active(self) -> bool:
@@ -188,11 +254,23 @@ class ContinuousBatchingEngine:
     free slots. Admission cost is one host-side cache scatter per
     request, which is fine at the reduced-config scale this repo serves;
     a production engine would fuse the graft into the prefill kernel.
+
+    ``kv_layout="paged"`` replaces the dense per-slot cache for linear
+    attention layers with a block pool + ``BlockAllocator``: a slot only
+    occupies the blocks its sequence actually needs (prompt bucket +
+    requested decode tokens) instead of a full ``cache_len`` row, so the
+    same token budget holds materially more concurrent sequences.
+    Admission is gated on free blocks, blocks are physically allocated
+    when decode crosses a block boundary, and eviction returns them to
+    the free list. Greedy outputs are token-identical to the dense
+    layout (asserted in tests/test_paged_kv.py).
     """
 
     def __init__(self, cfg: ModelConfig, max_slots: int = 4,
                  max_seq: int = 256, dtype=jnp.float32, seed: int = 0,
-                 share_from: "ContinuousBatchingEngine" = None):
+                 share_from: "ContinuousBatchingEngine" = None,
+                 kv_layout: str = "dense", block_size: int = 16,
+                 kv_blocks: int = None):
         if cfg.enc_dec:
             # cross-attention K/V is unmasked (_cross_core attends every
             # encoder row), so grafting a shorter prefilled ck/cv into the
@@ -200,9 +278,12 @@ class ContinuousBatchingEngine:
             raise NotImplementedError(
                 "continuous batching does not support encoder-decoder "
                 "architectures yet; use InferenceEngine")
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
         self.cfg = cfg
         self.n_slots = max(1, max_slots)
         self.cache_len = max_seq
+        self.kv_layout = kv_layout
         if share_from is not None and share_from.cfg == cfg:
             # co-resident instances of the same model share weights and
             # jit caches (docs/RUNTIME.md: spawn must be cheap for the
@@ -217,8 +298,26 @@ class ContinuousBatchingEngine:
             self.params = self.model.init(jax.random.PRNGKey(seed), dtype)
             self._prefill = jax.jit(self.model.prefill)
             self._decode = jax.jit(self.model.decode_step)
-        self.cache = self.model.init_cache(self.n_slots, self.cache_len,
-                                           dtype)
+        if kv_layout == "paged":
+            self.block_size = block_size
+            self.blocks_per_slot = -(-self.cache_len // block_size)
+            if kv_blocks is None:
+                # dense-equivalent worst case: admission can never refuse
+                # a request the dense layout would have taken
+                kv_blocks = self.n_slots * self.blocks_per_slot
+            self.allocator = BlockAllocator(kv_blocks, block_size)
+            # pool array includes the null block 0 (id range 0..kv_blocks)
+            self.cache = self.model.init_paged_cache(
+                self.n_slots, self.cache_len, kv_blocks + 1, block_size,
+                dtype)
+            self.block_tables = np.zeros(
+                (self.n_slots, self.blocks_per_slot), np.int32)
+        else:
+            self.block_size = 0
+            self.allocator = None
+            self.block_tables = None
+            self.cache = self.model.init_cache(self.n_slots, self.cache_len,
+                                               dtype)
         self.pos = np.zeros((self.n_slots,), np.int32)
         self.pending_tok = np.zeros((self.n_slots,), np.int32)
         self.slots = [_Slot() for _ in range(self.n_slots)]
@@ -242,28 +341,80 @@ class ContinuousBatchingEngine:
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.active]
 
+    def _frontend_tokens(self) -> int:
+        return self.cfg.frontend_tokens if (self.cfg.frontend is not None
+                                            and not self.cfg.enc_dec) else 0
+
+    def _seq_tokens(self, prompt_len: int, max_new: int) -> int:
+        """Cache positions a sequence occupies: frontend + bucketed
+        prompt + decode tokens (left-pad rows included — they are
+        attended, so the paged layout must hold them too)."""
+        return self._frontend_tokens() \
+            + _bucket(prompt_len, buckets=SEQ_BUCKETS) + max_new
+
+    def request_blocks(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case blocks a request of this shape reserves at
+        admission (paged layout)."""
+        room = self.cache_len - self._seq_tokens(prompt_len, 0)
+        return self.allocator.blocks_for(
+            self._seq_tokens(prompt_len, min(max_new, room)))
+
+    def admissible(self, prompt_len: int, max_new: int,
+                   pending_blocks: int = 0) -> bool:
+        """Could a request of this shape be admitted right now? Dense:
+        a free slot. Paged: a free slot AND enough unreserved blocks
+        (the real memory constraint, docs/ARCHITECTURE.md §5).
+        ``pending_blocks`` debits blocks a caller has already promised
+        to earlier requests it routed this pass but that the engine has
+        not reserved yet (reservation happens inside ``admit``)."""
+        if not self.free_slots:
+            return False
+        if self.kv_layout != "paged":
+            return True
+        return self.allocator.n_available - pending_blocks \
+            >= self.request_blocks(prompt_len, max_new)
+
     # ---- admission -------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 8) -> int:
-        """Queue a prompt; it joins a slot at the next iteration boundary."""
+        """Queue a prompt; it joins a slot at the next iteration boundary.
+
+        Raises only when the prompt can never fit a sequence's
+        ``cache_len`` budget. Transient pressure (no free slot, or — in
+        the paged layout — no free blocks) just keeps it queued; the
+        paged admission gate is the allocator's free-block count, not
+        dense ``cache_len`` headroom."""
         S = _bucket(len(prompt), buckets=SEQ_BUCKETS)
-        F = self.cfg.frontend_tokens if (self.cfg.frontend is not None
-                                         and not self.cfg.enc_dec) else 0
+        F = self._frontend_tokens()
         room = self.cache_len - (F + S)
         if room < 1:
             raise ValueError(
                 f"prompt bucket {S} (+{F} frontend) does not fit cache_len "
                 f"{self.cache_len}")
+        if self.kv_layout == "paged":
+            # a reservation that exceeds the whole pool could never be
+            # admitted — queuing it would livelock the FIFO head forever
+            # (same boundary rule as the over-length bucket check above)
+            need = self.allocator.blocks_for(
+                F + S + min(max_new_tokens, room))
+            if need > self.allocator.n_blocks:
+                raise ValueError(
+                    f"request needs {need} blocks, pool has only "
+                    f"{self.allocator.n_blocks}")
         rid = self._next_id
         self._next_id += 1
         self.waiting.append((rid, np.asarray(prompt, np.int32),
                              min(max_new_tokens, room), self._now()))
         return rid
 
-    def _graft(self, one_cache, slot: int) -> None:
-        """Scatter a freshly-prefilled single-sequence cache into batch
-        row ``slot`` of the persistent slot cache, zero-padding each leaf
-        up to the slot cache's length axes (same semantics as
-        ``pad_cache``: prefill wrote [0, S), decode writes from S on)."""
+    def _graft(self, one_cache, slot: int, block_ids=None) -> None:
+        """Scatter a freshly-prefilled single-sequence cache into the
+        persistent cache. Dense layers (and windowed/recurrent state in
+        both layouts) write batch row ``slot``, zero-padding each leaf up
+        to the slot cache's length axes (same semantics as ``pad_cache``:
+        prefill wrote [0, S), decode writes from S on). Paged linear-KV
+        layers instead ``scatter_blocks`` the prefilled rows into the
+        physical blocks ``block_ids`` the allocator handed this slot —
+        grafting is block-granular, no ``cache_len`` copy."""
         def graft_layer(full_c, one_c, batch_axis: int):
             def leaf(t, s):
                 row = jnp.take(s, 0, axis=batch_axis)
@@ -276,23 +427,53 @@ class ContinuousBatchingEngine:
                 return t.at[idx].set(row)
             return jax.tree.map(leaf, full_c, one_c)
 
+        def graft_paged(full_c, one_c, stacked: bool):
+            ids = jnp.asarray(block_ids, jnp.int32)
+            scatter = scatter_blocks_stacked if stacked else scatter_blocks
+            return {key: scatter(full_c[key],
+                                 one_c[key][:, 0] if stacked
+                                 else one_c[key][0], ids)
+                    for key in ("k", "v")}
+
+        paged = self.kv_layout == "paged"
+        _, tail_kinds = _split_layers(self.cfg)
         new: Dict = {}
         if "units" in self.cache:
             new["units"] = tuple(
-                graft_layer(fc, oc, batch_axis=1)
-                for fc, oc in zip(self.cache["units"], one_cache["units"]))
+                graft_paged(fc, oc, stacked=True)
+                if paged and paged_layer_kind(self.cfg, kind)
+                else graft_layer(fc, oc, batch_axis=1)
+                for kind, fc, oc in zip(self.cfg.block_pattern,
+                                        self.cache["units"],
+                                        one_cache["units"]))
         if "tail" in self.cache:
             new["tail"] = tuple(
-                graft_layer(fc, oc, batch_axis=0)
-                for fc, oc in zip(self.cache["tail"], one_cache["tail"]))
+                graft_paged(fc, oc, stacked=False)
+                if paged and paged_layer_kind(self.cfg, kind)
+                else graft_layer(fc, oc, batch_axis=0)
+                for kind, fc, oc in zip(tail_kinds, self.cache["tail"],
+                                        one_cache["tail"]))
         self.cache = new
 
     def admit(self) -> int:
-        """Prefill waiting prompts into free slots. Returns #admissions."""
+        """Prefill waiting prompts into free slots. Returns #admissions.
+
+        Paged layout: FIFO admission is additionally gated on the
+        allocator — the head request's worst-case block count
+        (prompt bucket + requested decode tokens) must be reservable, or
+        it (and everything behind it) stays queued until evictions free
+        blocks."""
         n = 0
         free = self.free_slots
         while self.waiting and free:
-            rid, prompt, max_new, submit_s = self.waiting.pop(0)
+            rid, prompt, max_new, submit_s = self.waiting[0]
+            reserved = 0
+            if self.kv_layout == "paged":
+                reserved = self.allocator.blocks_for(
+                    self._seq_tokens(len(prompt), max_new))
+                if not self.allocator.reserve(reserved):
+                    break  # FIFO: head of queue blocks on memory
+            self.waiting.pop(0)
             slot = free.pop(0)
             batch, S, _ = make_prefill_batch(self.cfg, [prompt])
             self.prefill_shapes.add(tuple(batch["tokens"].shape))
@@ -300,12 +481,26 @@ class ContinuousBatchingEngine:
             F = 0
             if self.cfg.frontend is not None and not self.cfg.enc_dec:
                 F = batch["frontend_embeds"].shape[1]
-            self._graft(one_cache, slot)
+            if self.kv_layout == "paged":
+                # physically allocate the prefill prefix now; the decode
+                # tail of the reservation is claimed lazily at block
+                # boundaries in step()
+                n0 = self.allocator.blocks_for(F + S)
+                ids = [self.allocator.alloc_reserved() for _ in range(n0)]
+                self.block_tables[slot, :n0] = ids
+                self._graft(one_cache, slot, block_ids=ids)
+                self.slots[slot] = _Slot(
+                    request_id=rid, remaining=max_new, submit_s=submit_s,
+                    admit_s=self._now(), blocks=ids,
+                    n_outstanding=reserved - n0)
+            else:
+                self._graft(one_cache, slot)
+                self.slots[slot] = _Slot(request_id=rid, remaining=max_new,
+                                         submit_s=submit_s,
+                                         admit_s=self._now())
             self.pos[slot] = F + S
             self.pending_tok[slot] = int(np.asarray(
                 jnp.argmax(logits[0, -1, :], -1)))
-            self.slots[slot] = _Slot(request_id=rid, remaining=max_new,
-                                     submit_s=submit_s, admit_s=self._now())
             self.n_admitted += 1
             n += 1
         return n
@@ -328,10 +523,22 @@ class ContinuousBatchingEngine:
             s.tokens.append(int(self.pending_tok[i]))
             s.n_emitted += 1
             s.remaining -= 1
-        logits, self.cache = self._decode(
-            self.params, self.cache,
-            {"tokens": jnp.asarray(self.pending_tok[:, None]),
-             "pos": jnp.asarray(self.pos)})
+        batch = {"tokens": jnp.asarray(self.pending_tok[:, None]),
+                 "pos": jnp.asarray(self.pos)}
+        if self.kv_layout == "paged":
+            # alloc-on-decode-boundary: the write at ``pos`` needs its
+            # block mapped before the decode runs; the admission
+            # reservation guarantees the free list cannot be empty here
+            bs = self.block_size
+            for i in active:
+                s = self.slots[i]
+                while self.pos[i] >= len(s.blocks) * bs:
+                    bid = self.allocator.alloc_reserved()
+                    s.n_outstanding -= 1
+                    self.block_tables[i, len(s.blocks)] = bid
+                    s.blocks.append(bid)
+            batch["block_tables"] = jnp.asarray(self.block_tables)
+        logits, self.cache = self._decode(self.params, self.cache, batch)
         nxt = np.asarray(jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32))
         self.n_iters += 1
         finished: List[ContinuousResult] = []
@@ -346,6 +553,13 @@ class ContinuousBatchingEngine:
                     s.request_id, np.asarray(s.tokens, np.int32),
                     submit_s=s.submit_s, admit_s=s.admit_s, finish_s=now,
                     n_iters=s.n_emitted))
+                if self.kv_layout == "paged":
+                    # free-on-evict: blocks return to the pool, the
+                    # unconsumed tail of the reservation is cancelled
+                    self.allocator.free(s.blocks)
+                    self.allocator.unreserve(s.n_outstanding)
+                    self.block_tables[i, :] = 0
+                    self.pos[i] = 0
                 self.slots[i] = _Slot()
                 self.n_evicted += 1
             else:
@@ -365,11 +579,46 @@ class ContinuousBatchingEngine:
         done.sort(key=lambda r: r.request_id)
         return done
 
+    # ---- KV occupancy accounting (docs/ARCHITECTURE.md §5) --------------
+    @property
+    def kv_used_tokens(self) -> int:
+        """Cache positions live sequences actually occupy (written or
+        about to be written next iteration)."""
+        return int(sum(int(self.pos[i]) + 1 for i in self.active_slots))
+
+    @property
+    def kv_allocated_tokens(self) -> int:
+        """Cache positions *committed*: the whole slab for the dense
+        layout, allocated blocks × block_size for the paged one."""
+        if self.kv_layout == "paged":
+            n_alloc = self.allocator.n_blocks - self.allocator.n_free
+            return n_alloc * self.block_size
+        return self.n_slots * self.cache_len
+
+    @property
+    def kv_free_tokens(self) -> int:
+        """Admission headroom in tokens: unreserved blocks (paged) or
+        free slots × cache_len (dense)."""
+        if self.kv_layout == "paged":
+            return self.allocator.n_available * self.block_size
+        return len(self.free_slots) * self.cache_len
+
     def stats(self) -> Dict[str, float]:
+        """Counters + KV occupancy metrics, so benchmarks can report
+        dense-vs-paged waste without poking engine internals."""
+        used = float(self.kv_used_tokens)
+        alloc = float(self.kv_allocated_tokens)
         return {
             "n_iters": float(self.n_iters),
             "n_admitted": float(self.n_admitted),
             "n_evicted": float(self.n_evicted),
             "n_prefill_shapes": float(len(self.prefill_shapes)),
             "n_slots": float(self.n_slots),
+            "kv_used_tokens": used,
+            "kv_allocated_tokens": alloc,
+            "kv_waste_frac": 1.0 - used / alloc if alloc else 0.0,
+            "kv_reserved_tokens": float(
+                self.allocator.n_reserved * self.block_size
+                if self.kv_layout == "paged" else 0),
+            "queue_depth": float(len(self.waiting)),
         }

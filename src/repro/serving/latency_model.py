@@ -120,6 +120,30 @@ def predicted_iter_ms(t1_ms: float, contention: float, n_instances: int
     return t1_ms * (1.0 + contention * max(0, n_instances - 1))
 
 
+def fit_occupancy(samples: Sequence[Tuple[int, float]]) -> float:
+    """Calibrate mean KV tokens per resident sequence from MEASURED
+    occupancy (docs/RUNTIME.md: the pool records
+    (total resident sequences, Σ engine ``kv_used_tokens``) pairs every
+    pure-decode iteration).
+
+    Through-origin least squares — zero resident sequences must use zero
+    tokens. This replaces :func:`instance_memory_gb`'s analytic
+    activation curve as the memory term the ``PoolScheduler`` guard uses
+    once a paged pool reports real occupancy: a proposed (b, m_c) is
+    memory-feasible iff ``b * m_c * fit_occupancy(...)`` (plus the other
+    tenants' measured usage) fits the shared block budget.
+    """
+    num = sum(float(n) * float(t) for n, t in samples)
+    den = sum(float(n) * float(n) for n, _ in samples)
+    return num / den if den > 0.0 else 0.0
+
+
+def predicted_kv_tokens(tokens_per_seq: float, n_seqs: int) -> float:
+    """KV tokens the :func:`fit_occupancy` model predicts for ``n_seqs``
+    concurrently resident sequences."""
+    return tokens_per_seq * max(0, n_seqs)
+
+
 def transmission_ms(hw: HardwareSpec, model: EdgeModelProfile) -> float:
     size_mb = 2.0 * math.prod(model.input_shape) / 1e6  # fp16 payload
     return hw.io_ms_per_mb * size_mb + 0.2

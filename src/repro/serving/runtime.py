@@ -26,6 +26,15 @@ Instances of the same model share weights and jit caches
 (``ContinuousBatchingEngine(share_from=...)``) so ``spawn`` is cheap
 enough to be a per-decision action; each instance keeps its own KV slot
 cache, which is what actually bounds m_c on a real host.
+
+Under ``kv_layout="paged"`` (docs/RUNTIME.md §7) every engine uses the
+block-pool KV layout and the pool shares ONE ``kv_block_budget`` across
+instances: ``spawn``/``scale_to`` are constrained by actual free blocks,
+the router's admission gate is the per-engine ``BlockAllocator``, and
+every pure-decode iteration records real occupancy samples that
+calibrate ``latency_model.fit_occupancy`` — the measured memory model
+the ``PoolScheduler``'s Eq.-4 guard checks proposed (b, m_c) actions
+against, in place of the analytic ``instance_memory_gb`` curve.
 """
 from __future__ import annotations
 
@@ -50,6 +59,10 @@ DRAINING = "draining"
 RETIRED = "retired"
 
 _seq = itertools.count()
+
+#: trailing window the contention/occupancy fits read (and the bound the
+#: sample lists are trimmed to, so long-lived serving loops do not leak)
+_SAMPLE_WINDOW = 512
 
 
 @dataclasses.dataclass
@@ -98,10 +111,11 @@ class ModelInstance:
     per-instance bookkeeping (resident requests, Eq.-1 slot share)."""
 
     def __init__(self, instance_id: int, model: str,
-                 engine: ContinuousBatchingEngine):
+                 engine: ContinuousBatchingEngine, kv_blocks: int = 0):
         self.instance_id = instance_id
         self.model = model
         self.engine = engine
+        self.kv_blocks = kv_blocks  # share of the pool's block budget
         self.state = STARTING
         self.requests: Dict[int, PoolRequest] = {}  # engine rid -> request
         self.n_served = 0
@@ -138,7 +152,10 @@ class ModelInstancePool:
                  max_instances: int = 8, max_slots: int = 4,
                  max_seq: int = 128, seed: int = 0,
                  strict_admission: bool = False,
-                 predictor=None):
+                 predictor=None, kv_layout: str = "dense",
+                 block_size: int = 16,
+                 kv_block_budget: Optional[int] = None,
+                 blocks_per_instance: Optional[int] = None):
         self.configs = dict(configs)
         self.max_instances = max_instances
         self.max_slots = max_slots
@@ -146,6 +163,22 @@ class ModelInstancePool:
         self.seed = seed
         self.strict_admission = strict_admission
         self.predictor = predictor
+        #: paged KV serving (docs/RUNTIME.md §7): every instance's engine
+        #: uses the block-pool layout and the pool shares ONE block
+        #: budget across all instances — memory becomes a managed
+        #: resource instead of the analytic latency_model curve
+        self.kv_layout = kv_layout
+        self.block_size = block_size
+        self.kv_block_budget = kv_block_budget
+        self.kv_blocks_free = kv_block_budget
+        #: target grant for a paged instance; default = dense-equivalent
+        #: worst case. Sizing it from measured occupancy
+        #: (``occupancy_tokens_per_seq``) is how a paged pool fits more
+        #: instances into the same budget than dense slabs allow.
+        self.blocks_per_instance = blocks_per_instance
+        #: (total resident sequences, Σ kv_used_tokens) per pure-decode
+        #: iteration — calibrates latency_model.fit_occupancy
+        self.occupancy_samples: List[Tuple[int, int]] = []
         self.instances: Dict[str, List[ModelInstance]] = {
             m: [] for m in self.configs}
         self.slot_caps: Dict[str, int] = {m: max_slots for m in self.configs}
@@ -189,19 +222,75 @@ class ModelInstancePool:
         iteration time, so predictions must not count them)."""
         return sum(1 for i in self.live() if i.n_resident > 0)
 
+    def _dense_equiv_blocks(self) -> int:
+        """Dense-equivalent worst-case grant: the whole
+        (max_slots, max_seq) slab expressed in blocks — what a dense
+        instance COMMITS by construction."""
+        return self.max_slots * (-(-self.max_seq // self.block_size))
+
+    def _min_viable_blocks(self) -> int:
+        """Smallest grant a spawned paged instance can serve with: one
+        slot's worst case, or the operator's explicit (right-sized)
+        ``blocks_per_instance`` target if that is smaller — deliberate
+        oversubscription against measured occupancy."""
+        one_slot = -(-self.max_seq // self.block_size)
+        if self.blocks_per_instance:
+            return min(one_slot, self.blocks_per_instance)
+        return one_slot
+
+    def _spawn_grant(self) -> int:
+        """Blocks the next spawn would charge against the budget."""
+        if self.kv_layout != "paged":
+            return self._dense_equiv_blocks()
+        return self.blocks_per_instance or self._dense_equiv_blocks()
+
+    def can_spawn(self) -> bool:
+        """Instance budget AND block budget allow one more spawn —
+        ``scale_to`` is constrained by actual free blocks, not the
+        analytic memory curve. A dense instance must fit its whole slab;
+        a paged one can start on a partial grant (min one slot)."""
+        if self.total_live() >= self.max_instances:
+            return False
+        if self.kv_blocks_free is None:
+            return True
+        if self.kv_layout == "paged":
+            return self.kv_blocks_free >= self._min_viable_blocks()
+        return self.kv_blocks_free >= self._dense_equiv_blocks()
+
     def spawn(self, model: str) -> ModelInstance:
         """STARTING → RUNNING. Raises when the pool-wide instance budget
-        is exhausted (use scale_to for clamped semantics)."""
+        or the shared KV block budget is exhausted (use scale_to for
+        clamped semantics)."""
         if self.total_live() >= self.max_instances:
             raise RuntimeError(
                 f"pool at max_instances={self.max_instances}")
+        grant = self._spawn_grant()
+        kw = {}
+        if self.kv_blocks_free is not None:
+            if self.kv_layout == "paged":
+                grant = min(grant, self.kv_blocks_free)
+                if grant < self._min_viable_blocks():
+                    raise RuntimeError(
+                        f"KV block budget exhausted "
+                        f"({self.kv_blocks_free} free of "
+                        f"{self.kv_block_budget})")
+            elif self.kv_blocks_free < grant:
+                raise RuntimeError(
+                    f"KV block budget exhausted: dense slab needs "
+                    f"{grant} blocks, {self.kv_blocks_free} free")
+            self.kv_blocks_free -= grant
+        elif self.kv_layout != "paged":
+            grant = 0  # unlimited dense pool: nothing to account
+        if self.kv_layout == "paged":
+            kw = {"kv_layout": "paged", "block_size": self.block_size,
+                  "kv_blocks": grant}
         tmpl = self._templates.get(model)
         eng = ContinuousBatchingEngine(
             self.configs[model], max_slots=self.max_slots,
-            max_seq=self.max_seq, seed=self.seed, share_from=tmpl)
+            max_seq=self.max_seq, seed=self.seed, share_from=tmpl, **kw)
         if tmpl is None:
             self._templates[model] = eng
-        inst = ModelInstance(self._next_iid, model, eng)
+        inst = ModelInstance(self._next_iid, model, eng, kv_blocks=grant)
         self._next_iid += 1
         self.instances[model].append(inst)
         inst.state = RUNNING  # engine construction == warm start
@@ -236,8 +325,7 @@ class ModelInstancePool:
         draining = [i for i in self.instances[model] if i.state == DRAINING]
         while len(self.running(model)) < m_c and draining:
             draining.pop(0).state = RUNNING  # revive
-        while len(self.running(model)) < m_c \
-                and self.total_live() < self.max_instances:
+        while len(self.running(model)) < m_c and self.can_spawn():
             self.spawn(model)
         return len(self.running(model))
 
@@ -256,6 +344,12 @@ class ModelInstancePool:
                 if inst.state == DRAINING and inst.n_resident == 0:
                     inst.state = RETIRED
                     inst.engine = None
+                    if self.kv_blocks_free is not None:
+                        # the instance's KV block grant returns to the
+                        # shared budget (the paged analogue of dropping
+                        # the dense slot cache)
+                        self.kv_blocks_free += inst.kv_blocks
+                    inst.kv_blocks = 0
                     self.retired.append(inst)
                 else:
                     keep.append(inst)
@@ -291,6 +385,22 @@ class ModelInstancePool:
             return float("inf")
         return (self.queues[model][0][0] - self.now()) * 1000.0
 
+    def _never_admissible(self, model: str, req: PoolRequest) -> bool:
+        """True when ``req``'s worst-case block reservation exceeds every
+        grant this pool could ever field for ``model`` — the largest
+        live instance AND the (unclamped, optimistic) grant a future
+        spawn would take. Such a request can never leave the EDF queue,
+        so the router rejects it up front."""
+        if self.kv_layout != "paged":
+            return False
+        insts = self.running(model)
+        if not insts:
+            return False
+        need = insts[0].engine.request_blocks(len(req.prompt),
+                                              req.max_new_tokens)
+        cap = max(i.engine.allocator.n_blocks for i in insts)
+        return need > max(cap, self._spawn_grant())
+
     def _reject(self, req: PoolRequest) -> PoolResult:
         now = self.now()
         res = PoolResult(req.request_id, req.model, -1,
@@ -309,6 +419,12 @@ class ModelInstancePool:
         rejected: List[PoolResult] = []
         now = self.now()
         t1, c = self.contention()
+        #: blocks promised to requests routed THIS pass that their engine
+        #: has not reserved yet (reservation happens inside engine.admit,
+        #: at the next iteration boundary) — without this debit a single
+        #: route() pass could admit several EDF heads against the same
+        #: free blocks
+        pending: Dict[int, int] = {}
         for model, q in self.queues.items():
             cap = self.slot_caps[model]
             open_insts = [i for i in self.running(model)
@@ -327,8 +443,29 @@ class ModelInstancePool:
                         continue
                 if not open_insts:
                     break
-                inst = max(open_insts, key=lambda i: cap - i.n_resident)
+                # paged engines additionally gate on free KV blocks —
+                # a slot is only admissible when the request's worst-case
+                # block need is reservable (docs/RUNTIME.md §7)
+                cands = [i for i in open_insts
+                         if i.engine.admissible(
+                             len(req.prompt), req.max_new_tokens,
+                             pending.get(i.instance_id, 0))]
+                if not cands:
+                    if self._never_admissible(model, req):
+                        # no current or future grant could ever hold the
+                        # reservation: reject instead of livelocking the
+                        # EDF head (and everything behind it) forever
+                        heapq.heappop(q)
+                        rejected.append(self._reject(req))
+                        continue
+                    break
+                inst = max(cands, key=lambda i: cap - i.n_resident)
                 heapq.heappop(q)
+                if self.kv_layout == "paged":
+                    pending[inst.instance_id] = \
+                        pending.get(inst.instance_id, 0) \
+                        + inst.engine.request_blocks(len(req.prompt),
+                                                     req.max_new_tokens)
                 erid = inst.engine.submit(req.prompt, req.max_new_tokens)
                 req.admit_s = now
                 inst.requests[erid] = req
@@ -388,6 +525,15 @@ class ModelInstancePool:
         iter_ms = (time.perf_counter() - t0) * 1000.0
         if pure_decode:
             self.contention_samples.append((overlap, iter_ms))
+            self.occupancy_samples.append(
+                (sum(i.n_resident for i in busy),
+                 sum(i.engine.kv_used_tokens for i in busy)))
+            if len(self.contention_samples) > 2 * _SAMPLE_WINDOW:
+                # long-lived serving loops step for hours: keep only the
+                # trailing window the calibration fits ever read
+                del self.contention_samples[:-_SAMPLE_WINDOW]
+            if len(self.occupancy_samples) > 2 * _SAMPLE_WINDOW:
+                del self.occupancy_samples[:-_SAMPLE_WINDOW]
         if self.predictor is not None and pure_decode:
             for inst in busy:
                 self.predictor.observe(
@@ -440,6 +586,7 @@ class ModelInstancePool:
         self._results = {m: [] for m in self.configs}
         self.admission_log = []
         self.contention_samples = []
+        self.occupancy_samples = []
         self.n_rejected = 0
         self.n_steps = 0
         for lst in self.instances.values():
@@ -452,7 +599,36 @@ class ModelInstancePool:
         (``latency_model.fit_contention``); ``(0, 0)`` before warmup."""
         if len(self.contention_samples) < 8:
             return 0.0, 0.0
-        return lm.fit_contention(self.contention_samples[-512:])
+        return lm.fit_contention(self.contention_samples[-_SAMPLE_WINDOW:])
+
+    # ---- KV occupancy (docs/RUNTIME.md §7) -------------------------------
+    def kv_used_tokens(self, model: Optional[str] = None) -> int:
+        """Σ cache tokens resident sequences occupy right now, over the
+        live instances of ``model`` (or all models)."""
+        return sum(i.engine.kv_used_tokens for i in self.live(model))
+
+    def occupancy_tokens_per_seq(self) -> float:
+        """Measured mean KV tokens per resident sequence
+        (``latency_model.fit_occupancy``); 0.0 before calibration."""
+        if len(self.occupancy_samples) < 8:
+            return 0.0
+        return lm.fit_occupancy(self.occupancy_samples[-_SAMPLE_WINDOW:])
+
+    def kv_occupancy(self) -> Dict[str, float]:
+        """Real occupancy of the shared KV budget — what grounds the
+        ``PoolScheduler`` Eq.-4 guard when the pool is paged. Budget
+        fields are 0 for unlimited budgets."""
+        budget_blocks = self.kv_block_budget or 0
+        committed = sum(i.kv_blocks for i in self.live())
+        return {
+            "used_tokens": float(self.kv_used_tokens()),
+            "allocated_tokens": float(sum(
+                i.engine.kv_allocated_tokens for i in self.live())),
+            "budget_tokens": float(budget_blocks * self.block_size),
+            "free_blocks": float(self.kv_blocks_free or 0),
+            "committed_blocks": float(committed),
+            "tokens_per_seq": self.occupancy_tokens_per_seq(),
+        }
 
     def slot_ms(self, model: str) -> float:
         """Eq. 1 for the live allocation: t_i = Σ SLO of the model's
@@ -492,7 +668,7 @@ class ModelInstancePool:
 
     def stats(self) -> Dict[str, float]:
         t1, c = self.contention()
-        return {
+        out = {
             "n_steps": float(self.n_steps),
             "live_instances": float(self.total_live()),
             "retired_instances": float(len(self.retired)),
@@ -500,3 +676,6 @@ class ModelInstancePool:
             "contention_t1_ms": t1,
             "contention_c": c,
         }
+        if self.kv_layout == "paged" or self.kv_block_budget:
+            out.update({f"kv_{k}": v for k, v in self.kv_occupancy().items()})
+        return out

@@ -7,6 +7,10 @@ import numpy as np
 import pytest
 
 from repro.config import INPUT_SHAPES, get_config, get_reduced_config
+
+# one forward/train step per architecture adds up to minutes: excluded
+# from the tier-1 CI job, covered by the full-suite job (pytest.ini)
+pytestmark = pytest.mark.slow
 from repro.models import build_model
 from repro.train.optimizer import adam, apply_updates
 

@@ -69,6 +69,7 @@ def _greedy_regret(agent, env, n=300):
     return regret / n
 
 
+@pytest.mark.slow
 def test_sac_learns_bandit():
     env = Bandit()
     agent = SACAgent(env.dim, env.n_actions,
@@ -87,6 +88,7 @@ def test_sac_alpha_positive_and_bounded():
     assert agent.metrics["entropy"] >= 0.0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("cls", [TACAgent, DDQNAgent])
 def test_baseline_agents_learn_bandit(cls):
     env = Bandit()
@@ -96,6 +98,7 @@ def test_baseline_agents_learn_bandit(cls):
     assert _greedy_regret(agent, env) < 0.6
 
 
+@pytest.mark.slow
 def test_ppo_runs_and_improves():
     env = Bandit()
     agent = PPOAgent(env.dim, env.n_actions, lr=3e-3, gamma=0.0,

@@ -5,6 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# multi-second episodes / engine builds: excluded from the tier-1 CI
+# job, covered by the full-suite job (pytest.ini)
+pytestmark = pytest.mark.slow
+
 from repro.config import get_reduced_config
 from repro.config.base import ServingConfig
 from repro.core.interference import NNInterferencePredictor

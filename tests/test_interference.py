@@ -30,6 +30,7 @@ def _nonlinear_dataset(n=600, seed=0):
     return np.stack(X), np.asarray(y)
 
 
+@pytest.mark.slow
 def test_nn_beats_linear_on_nonlinear_latency():
     X, y = _nonlinear_dataset()
     tr, va = slice(0, 480), slice(480, 600)

@@ -1,0 +1,361 @@
+"""Paged KV-cache subsystem: block allocator invariants, pure
+gather/scatter block surgery, prefill-graft round trips across layer
+kinds, dense/paged token identity, and the pool's shared block budget
+(docs/ARCHITECTURE.md §5, docs/RUNTIME.md §7)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.transformer import (gather_blocks, paged_layer_kind,
+                                      scatter_blocks)
+from repro.serving.engine import (BlockAllocator, ContinuousBatchingEngine,
+                                  InferenceEngine)
+from repro.serving.runtime import ModelInstancePool
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                   n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=97)
+
+#: one config per layer-kind family the graft must round-trip
+KIND_CFGS = {
+    "global": TINY,
+    "windowed": ModelConfig(name="tiny-win", family="dense", n_layers=2,
+                            d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                            vocab_size=97,
+                            block_pattern=("attn", "local_attn"),
+                            sliding_window=16),
+    "rglru": ModelConfig(name="tiny-rg", family="hybrid", n_layers=2,
+                         d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                         vocab_size=97, block_pattern=("rglru", "attn")),
+    "rwkv": ModelConfig(name="tiny-rwkv", family="ssm", n_layers=2,
+                        d_model=64, n_heads=2, n_kv_heads=2, d_ff=64,
+                        vocab_size=97, block_pattern=("rwkv",),
+                        rwkv_head_size=32),
+    "tail": ModelConfig(name="tiny-tail", family="dense", n_layers=3,
+                        d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                        vocab_size=97, block_pattern=("attn", "attn")),
+}
+
+
+# ------------------------------------------------------------ allocator
+def test_allocator_invariants():
+    al = BlockAllocator(8, block_size=16)
+    assert al.n_free == 8 and al.n_available == 8
+    assert al.blocks_for(0) == 0
+    assert al.blocks_for(1) == 1
+    assert al.blocks_for(16) == 1
+    assert al.blocks_for(17) == 2
+    assert al.reserve(5)
+    assert al.n_available == 3 and al.n_free == 8
+    ids = [al.alloc_reserved() for _ in range(3)]
+    assert len(set(ids)) == 3 and all(0 < i <= 8 for i in ids)
+    assert al.n_free == 5 and al.n_reserved == 2 and al.n_available == 3
+    assert not al.reserve(4)  # only 3 available
+    al.free(ids)
+    al.unreserve(2)
+    assert al.n_free == 8 and al.n_available == 8 and al.n_reserved == 0
+
+
+def test_allocator_never_hands_out_null_block():
+    al = BlockAllocator(4, block_size=8)
+    assert al.reserve(4)
+    ids = [al.alloc_reserved() for _ in range(4)]
+    assert sorted(ids) == [1, 2, 3, 4]  # id 0 (null) never allocated
+    with pytest.raises(AssertionError):
+        al.alloc_reserved()  # nothing reserved any more
+
+
+# ------------------------------------------------------------ pure API
+def test_scatter_gather_blocks_round_trip():
+    pool = jnp.zeros((6, 4, 2, 3))
+    rows = jnp.arange(10 * 2 * 3, dtype=jnp.float32).reshape(10, 2, 3)
+    ids = jnp.asarray([5, 2, 4], jnp.int32)  # 3 blocks = 12 slots >= 10
+    pool2 = scatter_blocks(pool, rows, ids)
+    back = gather_blocks(pool2, ids)
+    np.testing.assert_array_equal(np.asarray(back[:10]), np.asarray(rows))
+    np.testing.assert_array_equal(np.asarray(back[10:]), 0.0)  # ragged tail
+    # untouched blocks stay zero
+    np.testing.assert_array_equal(np.asarray(pool2[0]), 0.0)
+    with pytest.raises(ValueError):
+        scatter_blocks(pool, rows, jnp.asarray([1, 2], jnp.int32))
+
+
+def test_paged_layer_kind_predicate():
+    assert paged_layer_kind(TINY, "attn")
+    assert not paged_layer_kind(TINY, "rwkv")
+    assert not paged_layer_kind(TINY, "rglru")
+    assert not paged_layer_kind(KIND_CFGS["windowed"], "local_attn")
+    # dense arch with a global sliding window: ring buffer, not paged
+    swa = ModelConfig(name="t-swa", family="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=97,
+                      sliding_window=32)
+    assert not paged_layer_kind(swa, "attn")
+
+
+# ------------------------------------------------- graft round trips
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", sorted(KIND_CFGS))
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_graft_round_trip_matches_fresh_run(kind, layout):
+    """prefill -> graft -> decode through the slot engine must equal a
+    fresh single-sequence round-engine run, for every layer-kind family
+    and both cache layouts."""
+    cfg = KIND_CFGS[kind]
+    kw = {"kv_layout": "paged", "block_size": 8} if layout == "paged" else {}
+    eng = ContinuousBatchingEngine(cfg, max_slots=2, max_seq=64, **kw)
+    ref = InferenceEngine(cfg, max_seq=64)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, 97, n).astype(np.int32) for n in (5, 11, 17)]
+    res = eng.run(prompts, max_new_tokens=4)
+    for p, r in zip(prompts, res):
+        want = ref.generate([p], max_new_tokens=4).tokens[0]
+        assert np.array_equal(r.tokens, want), kind
+
+
+def test_paged_matches_dense_on_mixed_lengths():
+    """Acceptance: token-identical greedy outputs across layouts on a
+    mixed-length prompt set that churns slots and block boundaries."""
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(1, 97, n).astype(np.int32)
+               for n in (3, 14, 9, 30, 6, 22, 12, 5)]
+    dense = ContinuousBatchingEngine(TINY, max_slots=3, max_seq=64)
+    paged = ContinuousBatchingEngine(TINY, max_slots=3, max_seq=64,
+                                     kv_layout="paged", block_size=8)
+    rd = dense.run(prompts, max_new_tokens=7)
+    rp = paged.run(prompts, max_new_tokens=7)
+    assert [r.request_id for r in rp] == [r.request_id for r in rd]
+    for a, b in zip(rd, rp):
+        assert np.array_equal(a.tokens, b.tokens)
+    # eviction really returned every block
+    al = paged.allocator
+    assert al.n_free == al.n_blocks and al.n_reserved == 0
+
+
+# ------------------------------------------------- engine block gating
+def test_block_gated_admission_queues_and_drains():
+    """With a tiny block budget the engine admits what fits, queues the
+    rest, and serves everything as evictions free blocks."""
+    # 6 blocks of 8 = 48 tokens; each request needs bucket16 + 4 = 3 blocks
+    eng = ContinuousBatchingEngine(TINY, max_slots=4, max_seq=64,
+                                   kv_layout="paged", block_size=8,
+                                   kv_blocks=6)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, 97, 10).astype(np.int32) for _ in range(5)]
+    for p in prompts:
+        eng.submit(p, max_new_tokens=4)
+    eng.admit()
+    # only 2 of the 4 free slots could take a reservation (2*3=6 blocks)
+    assert len(eng.active_slots) == 2
+    assert eng.stats()["queue_depth"] == 3.0
+    res = eng.run([], max_new_tokens=4)
+    assert len(res) == 5
+    assert all(len(r.tokens) == 4 for r in res)
+    assert eng.allocator.n_free == eng.allocator.n_blocks
+
+
+def test_submit_rejects_request_larger_than_block_pool():
+    """Regression (review finding): a reservation that exceeds the whole
+    pool could never be admitted — submit() must raise instead of
+    livelocking the FIFO head forever."""
+    eng = ContinuousBatchingEngine(TINY, max_slots=2, max_seq=128,
+                                   kv_layout="paged", block_size=16,
+                                   kv_blocks=4)
+    with pytest.raises(ValueError):
+        # bucket 64 + 16 new = 80 tokens = 5 blocks > 4 total
+        eng.submit(np.arange(1, 51, dtype=np.int32) % 97,
+                   max_new_tokens=16)
+    # a small request behind it still flows
+    eng.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=4)
+    res = eng.run([], max_new_tokens=4)
+    assert len(res) == 1
+
+
+@pytest.mark.slow
+def test_pool_rejects_never_admissible_request():
+    """Regression (review finding): a request no current or future grant
+    could hold is rejected by the router instead of blocking the EDF
+    queue (and everything behind it) forever."""
+    pool = ModelInstancePool({TINY.name: TINY}, max_instances=2,
+                             max_slots=2, max_seq=128, seed=0,
+                             kv_layout="paged", block_size=16,
+                             kv_block_budget=8, blocks_per_instance=4)
+    pool.scale_to(TINY.name, 1)
+    big = pool.submit(TINY.name, np.arange(1, 51, dtype=np.int32) % 97,
+                      slo_ms=60_000.0, max_new_tokens=16)  # needs 5 > 4
+    small = pool.submit(TINY.name, np.arange(1, 5, dtype=np.int32),
+                        slo_ms=60_000.0, max_new_tokens=4)
+    res = pool.run_until_drained()
+    by_id = {r.request_id: r for r in res}
+    assert by_id[big].rejected
+    assert not by_id[small].rejected and len(by_id[small].tokens) == 4
+
+
+@pytest.mark.slow
+def test_route_does_not_oversubscribe_blocks_in_one_pass():
+    """Regression (review finding): one route() pass must not admit two
+    EDF heads against the same free blocks — the second stays in the
+    pool queue (re-routable to whichever instance frees first) instead
+    of being stranded in one engine's internal FIFO."""
+    pool = ModelInstancePool({TINY.name: TINY}, max_instances=1,
+                             max_slots=4, max_seq=64, seed=0,
+                             kv_layout="paged", block_size=8,
+                             kv_block_budget=6, blocks_per_instance=6)
+    pool.scale_to(TINY.name, 1)
+    rng = np.random.default_rng(8)
+    # each request reserves bucket16 + 8 = 3 blocks; 6 free -> only 2 fit
+    for _ in range(3):
+        pool.submit(TINY.name, rng.integers(1, 97, 10).astype(np.int32),
+                    slo_ms=60_000.0, max_new_tokens=8)
+    pool.route()
+    inst = pool.running(TINY.name)[0]
+    assert inst.n_resident == 2          # not 3: third was not submitted
+    assert pool.queue_len(TINY.name) == 1
+    assert len(inst.engine.waiting) == 2  # both admissible at the engine
+    res = pool.run_until_drained()
+    assert len(res) == 3 and not any(r.rejected for r in res)
+
+
+def test_admissible_reflects_blocks_and_slots():
+    eng = ContinuousBatchingEngine(TINY, max_slots=2, max_seq=64,
+                                   kv_layout="paged", block_size=8,
+                                   kv_blocks=3)
+    assert eng.admissible(4, 4)         # 16+4 tokens -> 3 blocks, all free
+    eng.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=4)
+    eng.admit()
+    assert not eng.admissible(4, 4)     # blocks exhausted, slot free
+    dense = ContinuousBatchingEngine(TINY, max_slots=1, max_seq=64)
+    assert dense.admissible(4, 4)
+    dense.submit(np.arange(1, 5, dtype=np.int32))
+    dense.admit()
+    assert not dense.admissible(4, 4)   # no free slot
+
+
+def test_stats_report_kv_occupancy_metrics():
+    dense = ContinuousBatchingEngine(TINY, max_slots=2, max_seq=64)
+    paged = ContinuousBatchingEngine(TINY, max_slots=2, max_seq=64,
+                                     kv_layout="paged", block_size=8)
+    rng = np.random.default_rng(6)
+    p = rng.integers(1, 97, 6).astype(np.int32)
+    for eng in (dense, paged):
+        eng.submit(p, max_new_tokens=8)
+        eng.step()
+        s = eng.stats()
+        for key in ("kv_used_tokens", "kv_allocated_tokens",
+                    "kv_waste_frac", "kv_reserved_tokens", "queue_depth"):
+            assert key in s
+        assert s["kv_used_tokens"] > 0
+    # dense commits the whole slab; paged only the sequence's blocks
+    assert dense.stats()["kv_allocated_tokens"] == 2 * 64
+    assert paged.stats()["kv_allocated_tokens"] < 2 * 64
+    assert paged.stats()["kv_waste_frac"] \
+        < dense.stats()["kv_waste_frac"]
+
+
+# ------------------------------------------------- pool shared budget
+@pytest.mark.slow
+def test_pool_shared_block_budget_clamps_scale_to():
+    """One shared budget: dense slabs fit once, right-sized paged grants
+    fit four times; retiring instances returns their grant."""
+    # budget = one dense slab (2 slots * 64 tokens = 16 blocks of 8)
+    common = dict(max_instances=4, max_slots=2, max_seq=64, seed=0,
+                  kv_block_budget=16, block_size=8)
+    dense = ModelInstancePool({TINY.name: TINY}, **common)
+    assert dense.scale_to(TINY.name, 3) == 1  # slab-clamped
+    paged = ModelInstancePool({TINY.name: TINY}, kv_layout="paged",
+                              blocks_per_instance=4, **common)
+    assert paged.scale_to(TINY.name, 4) == 4  # right-sized grants fit
+    assert paged.kv_blocks_free == 0
+    occ = paged.kv_occupancy()
+    assert occ["budget_tokens"] == 16 * 8
+    assert occ["committed_blocks"] == 16
+    # drain-and-retire returns the grant to the shared budget
+    paged.scale_to(TINY.name, 1)
+    paged._sweep()
+    assert paged.kv_blocks_free == 12
+    assert paged.scale_to(TINY.name, 4) == 4
+
+
+@pytest.mark.slow
+def test_pool_paged_serves_and_calibrates_occupancy():
+    """End to end: a paged pool under a shared budget serves a burst,
+    reports real occupancy, and calibrates tokens-per-sequence."""
+    pool = ModelInstancePool({TINY.name: TINY}, max_instances=2,
+                             max_slots=2, max_seq=64, seed=0,
+                             kv_layout="paged", block_size=8,
+                             kv_block_budget=32)
+    pool.scale_to(TINY.name, 2)
+    rng = np.random.default_rng(7)
+    for _ in range(8):
+        pool.submit(TINY.name,
+                    rng.integers(1, 97, rng.integers(4, 12)).astype(
+                        np.int32), slo_ms=60_000.0, max_new_tokens=6)
+    res = pool.run_until_drained()
+    assert len(res) == 8 and not any(r.rejected for r in res)
+    assert len(pool.occupancy_samples) >= 8
+    tps = pool.occupancy_tokens_per_seq()
+    # sequences occupy bucket(<=16) + decode tokens: O(20ish)
+    assert 8.0 < tps < 40.0
+    stats = pool.stats()
+    assert stats["kv_budget_tokens"] == 32 * 8
+    # drained: nothing used any more
+    assert pool.kv_used_tokens() == 0
+
+
+@pytest.mark.slow
+def test_pool_guard_uses_free_blocks():
+    """PoolScheduler guard: with a calibrated occupancy model and a tiny
+    budget, an oversized (b, m_c) is degraded to fit the real free-block
+    budget instead of the analytic memory curve."""
+    from repro.config.base import ServingConfig
+    from repro.serving.bcedge import PoolScheduler
+
+    pool = ModelInstancePool({TINY.name: TINY}, max_instances=4,
+                             max_slots=4, max_seq=64, seed=0,
+                             kv_layout="paged", block_size=8,
+                             kv_block_budget=12, blocks_per_instance=12)
+    cfg = ServingConfig(batch_sizes=(1, 2, 4),
+                        concurrency_levels=(1, 2, 3))
+    sched = PoolScheduler(pool, cfg, slo_ms={TINY.name: 1000.0},
+                          guard=True, learn=False)
+    # calibrate: pretend each resident sequence occupies ~24 tokens
+    pool.occupancy_samples = [(n, 24 * n) for n in (1, 2, 3, 4) * 3]
+    # budget = 96 tokens; b=4, m_c=3 would need ~288 -> infeasible;
+    # the guard must degrade to something that fits
+    assert not sched._kv_feasible(TINY.name, 4, 3)
+    assert sched._kv_feasible(TINY.name, 4, 1)
+    a = cfg.pair_to_action(4, 3)
+    applied = sched._apply(TINY.name, a)
+    b, m_c = cfg.action_to_pair(applied)
+    assert sched.guard_interventions == 1
+    assert sched._kv_feasible(TINY.name, b, m_c)
+    assert (b, m_c) != (4, 3)
+
+
+# ------------------------------------------------- replay satellite
+def test_replay_buffer_lazy_allocation():
+    from repro.core.replay import ReplayBuffer
+
+    buf = ReplayBuffer(4, capacity=1_000_000)
+    # paper-sized capacity no longer eagerly commits (1e6, dim) arrays
+    assert buf.allocated_rows == ReplayBuffer.INITIAL_ROWS
+    for i in range(3000):
+        buf.add(np.full(4, i), i, float(i), np.full(4, i + 1), False)
+    assert len(buf) == 3000
+    assert buf.allocated_rows == 4096  # doubled, still << capacity
+    out = buf.sample(16)
+    assert out["s"].shape == (16, 4) and out["a"].max() < 3000
+
+
+def test_replay_buffer_ring_semantics_preserved():
+    from repro.core.replay import ReplayBuffer
+
+    buf = ReplayBuffer(2, capacity=10)
+    for i in range(27):
+        buf.add(np.full(2, i), i, float(i), np.full(2, i), i % 2)
+    assert len(buf) == 10 and buf.full
+    assert buf.allocated_rows == 10
+    # ring holds exactly the last `capacity` transitions
+    assert sorted(buf.a.tolist()) == list(range(17, 27))
+    s = buf.sample(32)
+    assert s["a"].min() >= 17

@@ -121,6 +121,7 @@ def test_pipeline_has_learnable_structure():
 
 
 # ---------------------------------------------------------------- trainer
+@pytest.mark.slow
 def test_trainer_reduces_loss():
     from repro.config.base import ModelConfig
     from repro.train.trainer import Trainer, TrainerConfig
