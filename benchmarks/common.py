@@ -24,9 +24,13 @@ from repro.configs.paper_edge_models import EDGE_MODELS  # noqa: E402
 MODELS = list(EDGE_MODELS.keys())
 STATE_DIM = state_dim(MODELS)
 
-FAST = os.environ.get("BENCH_FAST", "1") != "0"
-EP_MS = 20_000.0 if FAST else 60_000.0
-TRAIN_EPS = 16 if FAST else 36
+#: smoke mode (``benchmarks/run.py --smoke``, CI): every figure runs its
+#: full code path at toy scale — minutes for the whole suite — so
+#: benchmark scripts cannot silently rot. Numbers are NOT meaningful.
+SMOKE = os.environ.get("BENCH_SMOKE", "0") == "1"
+FAST = SMOKE or os.environ.get("BENCH_FAST", "1") != "0"
+EP_MS = 2_000.0 if SMOKE else (20_000.0 if FAST else 60_000.0)
+TRAIN_EPS = 2 if SMOKE else (16 if FAST else 36)
 
 #: trained-agent cache — figures sharing a (kind, platform, rps, guard)
 #: configuration reuse one training run (the paper trains once offline

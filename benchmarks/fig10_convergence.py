@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, train_agent
+from benchmarks.common import SMOKE, emit, train_agent
 from repro.config.base import ServingConfig
 
 
@@ -30,7 +30,7 @@ def _episodes_to_reach(curve, frac=0.85):
 
 def main(fast: bool = True) -> dict:
     cfg = ServingConfig()
-    eps = 8 if fast else 24
+    eps = 2 if SMOKE else (8 if fast else 24)
     curves, losses = {}, {}
     for kind in ("sac", "ppo", "ddqn", "ga"):
         _, _, hist = train_agent(kind, cfg, episodes=eps,

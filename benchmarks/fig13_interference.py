@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import SMOKE, emit
 from repro.config.base import ServingConfig
 from repro.core.interference import (LinearInterferencePredictor,
                                      NNInterferencePredictor)
@@ -14,7 +14,8 @@ from repro.serving.bcedge import collect_interference_dataset
 
 def main(fast: bool = True) -> dict:
     cfg = ServingConfig()
-    n = 2000  # paper protocol: 2000 samples, 1600 train / 400 validation
+    # paper protocol: 2000 samples, 1600 train / 400 validation
+    n = 200 if SMOKE else 2000
     X, y = collect_interference_dataset(cfg, n=n, seed=3)
     # paper protocol: 1600 train / 400 validation (80/20)
     n_train = int(0.8 * len(X))
@@ -24,7 +25,8 @@ def main(fast: bool = True) -> dict:
     out = {}
     for predictor in (NNInterferencePredictor(lr=3e-3),
                       LinearInterferencePredictor()):
-        predictor.fit(X[tr], y[tr], epochs=4000 if fast else 8000)
+        predictor.fit(X[tr], y[tr],
+                      epochs=300 if SMOKE else (4000 if fast else 8000))
         preds = np.array([predictor.predict(x) for x in X[va]])
         rel_err = np.abs(preds - y[va]) / np.maximum(np.abs(y[va]), 1e-9)
         p90 = float(np.percentile(rel_err, 90) * 100)

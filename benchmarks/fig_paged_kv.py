@@ -35,7 +35,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import FAST, emit
+from benchmarks.common import FAST, SMOKE, emit
 from repro.config.base import ModelConfig
 from repro.serving.engine import ContinuousBatchingEngine
 from repro.serving.runtime import ModelInstancePool
@@ -192,6 +192,9 @@ def _plot(cap_rows: list, pool_rows: list, path: str) -> bool:
 
 
 def main(fast: bool = FAST) -> dict:
+    global N_REQUESTS, M_C_SWEEP
+    if SMOKE:
+        N_REQUESTS, M_C_SWEEP = 8, (1, 2)
     cap_rows = [_run_engine("dense"), _run_engine("paged")]
     for r in cap_rows:
         emit(f"fig_paged.capacity.{r['layout']}", 0.0,
@@ -201,7 +204,7 @@ def main(fast: bool = FAST) -> dict:
     ratio = cap_rows[1]["peak_resident"] / max(1, cap_rows[0]["peak_resident"])
     emit("fig_paged.capacity.ratio", 0.0, f"{ratio:.2f}x")
 
-    burst = POOL_BURST if fast else 3 * POOL_BURST
+    burst = 8 if SMOKE else (POOL_BURST if fast else 3 * POOL_BURST)
     pool_rows = []
     for layout in ("dense", "paged"):
         for m_c in M_C_SWEEP:

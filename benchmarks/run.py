@@ -3,7 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 ``BENCH_FAST=0 PYTHONPATH=src python -m benchmarks.run`` for full-length
 runs; the default is the fast profile (shorter episodes, fewer seeds).
-``--only fig7`` runs a single module.
+``--only fig7`` runs a single module. ``--smoke`` runs every module at
+toy scale (the CI job that keeps benchmark scripts from rotting —
+numbers are meaningless, only the code paths are exercised).
 """
 from __future__ import annotations
 
@@ -27,6 +29,7 @@ MODULES = [
     "fig_continuous_vs_round",
     "fig_multimodel_concurrency",
     "fig_paged_kv",
+    "fig_preemption_chunked",
     "roofline_table",
 ]
 
@@ -35,8 +38,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on module names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy-scale run of every module (CI rot check)")
     args = ap.parse_args()
-    fast = os.environ.get("BENCH_FAST", "1") != "0"
+    if args.smoke:
+        # must land before benchmarks.common is imported by any module
+        os.environ["BENCH_SMOKE"] = "1"
+    fast = args.smoke or os.environ.get("BENCH_FAST", "1") != "0"
     failures = 0
     for name in MODULES:
         if args.only and args.only not in name:

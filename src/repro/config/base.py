@@ -171,6 +171,15 @@ class ServingConfig:
     is: each request needs a geometrically-distributed number of decode
     iterations with this mean (1.0 = the paper's single-shot CNN/BERT
     requests, where both modes coincide round-for-round).
+
+    ``prefill_tokens_mean`` > 0 gives continuous-mode requests a prompt
+    that must be prefilled before decoding (geometric, that mean);
+    ``token_budgets`` then becomes a third co-optimised action axis —
+    the per-iteration cap on prefill-chunk + decode tokens (0 =
+    uncapped), the knob that bounds iteration latency under long-prompt
+    arrivals (docs/ARCHITECTURE.md §5). ``preemption`` enables the
+    SLO-aware eviction policy (trigger/victim/hysteresis in
+    docs/RUNTIME.md §8) in the continuous simulator.
     """
 
     batch_sizes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128)
@@ -183,19 +192,45 @@ class ServingConfig:
     use_interference_predictor: bool = True
     exec_mode: str = "round"  # "round" | "continuous"
     decode_steps_mean: float = 1.0  # mean decode iterations per request
+    #: per-iteration token-budget action axis (0 = uncapped); the default
+    #: single level keeps the (b, m_c) action space unchanged
+    token_budgets: Tuple[int, ...] = (0,)
+    prefill_tokens_mean: float = 0.0  # mean prompt tokens (0 = single-shot)
+    preemption: bool = False  # SLO-aware eviction (continuous mode)
+    preempt_margin_ms: float = 50.0  # victim must out-slack urgent by this
+    max_preemptions: int = 2  # per-request cap (anti-thrash)
 
     def __post_init__(self):
         assert self.exec_mode in ("round", "continuous"), self.exec_mode
         assert self.decode_steps_mean >= 1.0, self.decode_steps_mean
+        assert self.token_budgets, "need at least one token-budget level"
+        assert all(t >= 0 for t in self.token_budgets), self.token_budgets
+        assert self.prefill_tokens_mean >= 0.0, self.prefill_tokens_mean
 
     @property
     def n_actions(self) -> int:
-        return len(self.batch_sizes) * len(self.concurrency_levels)
+        return len(self.batch_sizes) * len(self.concurrency_levels) * \
+            len(self.token_budgets)
 
     def action_to_pair(self, a: int) -> Tuple[int, int]:
         nb = len(self.batch_sizes)
+        a = a % (nb * len(self.concurrency_levels))
         return self.batch_sizes[a % nb], self.concurrency_levels[a // nb]
 
     def pair_to_action(self, b: int, m_c: int) -> int:
+        """(b, m_c) at the first (most permissive) token-budget level —
+        the exact pre-token-budget action encoding, kept stable so
+        existing callers and trained policies are unaffected."""
         return self.concurrency_levels.index(m_c) * len(self.batch_sizes) + \
             self.batch_sizes.index(b)
+
+    def action_to_triple(self, a: int) -> Tuple[int, int, int]:
+        """(b, m_c, token_budget) — token budget 0 means uncapped."""
+        nb, nm = len(self.batch_sizes), len(self.concurrency_levels)
+        b, m_c = self.action_to_pair(a)
+        return b, m_c, self.token_budgets[a // (nb * nm)]
+
+    def triple_to_action(self, b: int, m_c: int, token_budget: int) -> int:
+        nb, nm = len(self.batch_sizes), len(self.concurrency_levels)
+        return self.token_budgets.index(token_budget) * nb * nm + \
+            self.pair_to_action(b, m_c)

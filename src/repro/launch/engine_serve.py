@@ -110,18 +110,23 @@ def serve_round(arch: str = "qwen3-0.6b", duration_s: float = 20.0,
 def serve_continuous(arch: str = "qwen3-0.6b", duration_s: float = 20.0,
                      rps: float = 12.0, slo_ms: float = 1500.0,
                      max_slots: int = 4, kv_layout: str = "dense",
-                     kv_block_budget: Optional[int] = None) -> None:
+                     kv_block_budget: Optional[int] = None,
+                     token_budget: Optional[int] = None) -> None:
     """Continuous mode: arrivals are submitted into the slot engine as
     they land and join the running batch at iteration boundaries. With
     ``kv_layout="paged"``, ``kv_block_budget`` caps the engine's block
-    pool (default: the dense-equivalent worst case)."""
+    pool (default: the dense-equivalent worst case). ``token_budget``
+    caps per-iteration prefill+decode tokens (chunked prefill,
+    docs/ARCHITECTURE.md §5)."""
     cfg = get_reduced_config(arch)
     print(f"loading reduced {cfg.name} "
           f"(d={cfg.d_model}, L={cfg.n_layers}), "
-          f"{max_slots} slots, {kv_layout} KV...")
+          f"{max_slots} slots, {kv_layout} KV, "
+          f"token budget {token_budget or 'uncapped'}...")
     engine = ContinuousBatchingEngine(cfg, max_slots=max_slots, max_seq=128,
                                       kv_layout=kv_layout,
-                                      kv_blocks=kv_block_budget)
+                                      kv_blocks=kv_block_budget,
+                                      token_budget=token_budget)
     rng = np.random.default_rng(0)
 
     t0 = time.perf_counter()
@@ -157,7 +162,9 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
                max_slots: int = 4, max_new_tokens: int = 4,
                control_ms: float = 500.0, seed: int = 0,
                kv_layout: str = "dense",
-               kv_block_budget: Optional[int] = None
+               kv_block_budget: Optional[int] = None,
+               token_budget: Optional[int] = None,
+               preemption: bool = False
                ) -> Dict[str, Dict[str, float]]:
     """Multi-model pool serve (docs/RUNTIME.md): Poisson arrivals per
     model are routed by deadline into a ``ModelInstancePool`` of live
@@ -165,7 +172,9 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
     model once per Eq.-1 slot (clamped to [control_ms, 2000] ms).
     ``kv_layout="paged"`` serves every instance from the block-pool KV
     layout under a shared ``kv_block_budget`` (docs/RUNTIME.md §7).
-    Returns the pool's per-model report."""
+    ``token_budget`` adds the per-iteration token cap as a third
+    scheduler axis and ``preemption`` enables SLO-aware eviction
+    (docs/RUNTIME.md §8). Returns the pool's per-model report."""
     cfgs = {m: get_reduced_config(m) for m in models}
     for m, cfg in cfgs.items():
         print(f"loading reduced {cfg.name} "
@@ -175,11 +184,14 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
                              strict_admission=True,
                              predictor=NNInterferencePredictor(seed=seed),
                              kv_layout=kv_layout,
-                             kv_block_budget=kv_block_budget)
+                             kv_block_budget=kv_block_budget,
+                             preemption=preemption)
     per_model_mc = max(1, max_instances // max(1, len(cfgs)))
     scfg = ServingConfig(
         batch_sizes=tuple(b for b in (1, 2, 4, 8) if b <= max_slots),
-        concurrency_levels=tuple(range(1, per_model_mc + 1)))
+        concurrency_levels=tuple(range(1, per_model_mc + 1)),
+        token_budgets=(0,) if not token_budget
+        else (0, 2 * token_budget, token_budget))
     sched = PoolScheduler(pool, scfg,
                           slo_ms={m: slo_ms for m in cfgs},
                           decode_steps_mean=max_new_tokens, seed=seed)
@@ -226,7 +238,8 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
               f"({row['served']/max(dur,1e-6):.1f} rps), "
               f"SLO attainment {row['slo_attainment']:.1%}, "
               f"mean latency {row['mean_latency_ms']:.0f}ms, "
-              f"utility {row['mean_utility']:.2f}, m_c={row['m_c']:.0f}")
+              f"utility {row['mean_utility']:.2f}, m_c={row['m_c']:.0f}, "
+              f"preempted {row['preempted']:.0f}")
     print(f"[pool] stats: {pool.stats()}")
     print(f"[pool] guard interventions: {sched.guard_interventions}")
     return report
@@ -236,22 +249,29 @@ def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
          duration_s: float = 20.0, rps: float = 12.0,
          slo_ms: float = 1500.0, models: Optional[Sequence[str]] = None,
          max_instances: int = 4, kv_layout: str = "dense",
-         kv_block_budget: Optional[int] = None) -> None:
+         kv_block_budget: Optional[int] = None,
+         token_budget: Optional[int] = None,
+         preemption: bool = False) -> None:
     if models:
         if exec_mode != "continuous":
             print("multi-model pool serving is continuous-only; "
                   "running with --exec-mode continuous")
         serve_pool(models, duration_s, rps, slo_ms,
                    max_instances=max_instances, kv_layout=kv_layout,
-                   kv_block_budget=kv_block_budget)
+                   kv_block_budget=kv_block_budget,
+                   token_budget=token_budget, preemption=preemption)
     elif exec_mode == "continuous":
         serve_continuous(arch, duration_s, rps, slo_ms,
                          kv_layout=kv_layout,
-                         kv_block_budget=kv_block_budget)
+                         kv_block_budget=kv_block_budget,
+                         token_budget=token_budget)
     else:
         if kv_layout != "dense":
             print("round mode always uses the dense per-round cache; "
                   "--kv-layout applies to continuous/pool serving")
+        if token_budget or preemption:
+            print("chunked prefill / preemption are continuous-engine "
+                  "features; ignored in round mode")
         serve_round(arch, duration_s, rps, slo_ms)
 
 

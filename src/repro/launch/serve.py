@@ -52,6 +52,20 @@ def main() -> None:
                     help="total KV blocks shared by all pool instances "
                          "(paged only; default: unlimited, each "
                          "instance gets its dense-equivalent grant)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-iteration cap on prefill-chunk + decode "
+                         "tokens (chunked prefill, docs/ARCHITECTURE.md "
+                         "§5); engine/pool: fixed cap + scheduler axis; "
+                         "simulator: adds an action level. Default: "
+                         "uncapped")
+    ap.add_argument("--preemption", action="store_true",
+                    help="SLO-aware preemption: evict the largest-slack "
+                         "resident when an urgent request cannot be "
+                         "admitted (docs/RUNTIME.md §8)")
+    ap.add_argument("--prefill-tokens", type=float, default=0.0,
+                    help="simulator: mean prompt tokens per request "
+                         "(geometric; 0 = single-shot, no prefill "
+                         "modeling)")
     args = ap.parse_args()
 
     if args.models and not args.engine:
@@ -65,7 +79,9 @@ def main() -> None:
         engine_serve.main(exec_mode=args.exec_mode, arch=args.arch,
                           models=models, max_instances=args.max_instances,
                           kv_layout=args.kv_layout,
-                          kv_block_budget=args.kv_block_budget)
+                          kv_block_budget=args.kv_block_budget,
+                          token_budget=args.token_budget,
+                          preemption=args.preemption)
         return
 
     from repro.config.base import ServingConfig
@@ -79,7 +95,11 @@ def main() -> None:
 
     cfg = ServingConfig(platform=args.platform, arrival_rps=args.rps,
                         exec_mode=args.exec_mode,
-                        decode_steps_mean=max(1.0, args.decode_steps))
+                        decode_steps_mean=max(1.0, args.decode_steps),
+                        prefill_tokens_mean=max(0.0, args.prefill_tokens),
+                        token_budgets=(0,) if not args.token_budget
+                        else (0, args.token_budget),
+                        preemption=args.preemption)
     env0 = EdgeServingEnv(cfg, episode_ms=1.0)
     agent = SACAgent(state_dim(env0.models), cfg.n_actions,
                      SACConfig(batch_size=256, lr=5e-4))

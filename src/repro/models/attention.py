@@ -225,6 +225,76 @@ def attention_decode_paged(p: Dict, x: jax.Array, cache: Dict,
     return out.reshape(B, 1, -1) @ p["wo"], cache
 
 
+def _write_chunk_linear(cache: jax.Array, new: jax.Array,
+                        pos: jax.Array) -> jax.Array:
+    """cache (B,C,KV,hd), new (B,T,KV,hd), pos (B,) -> rows pos..pos+T-1
+    of each sequence overwritten with the chunk's K/V."""
+
+    def row(c, n, s):
+        return jax.lax.dynamic_update_slice(c, n, (s, 0, 0))
+
+    return jax.vmap(row)(cache, new, pos)
+
+
+def _write_chunk_ring(cache: jax.Array, new: jax.Array,
+                      pos: jax.Array) -> jax.Array:
+    """Ring-buffer chunk write: slot ``(pos+j) % C`` must end up holding
+    the LAST position of the chunk that maps to it (T may exceed the
+    window, in which case early chunk positions are overwritten — the
+    same final state sequential decode writes would leave)."""
+    B, C = cache.shape[0], cache.shape[1]
+    T = new.shape[1]
+    slots = jnp.arange(C, dtype=jnp.int32)[None, :]           # (1, C)
+    j0 = (slots - pos[:, None]) % C                           # (B, C)
+    j_last = j0 + ((T - 1 - j0) // C) * C                     # largest < T
+    written = j0 < T
+    j_safe = jnp.clip(j_last, 0, T - 1)
+    picked = jnp.take_along_axis(
+        new, j_safe[:, :, None, None], axis=1)                # (B, C, KV, hd)
+    return jnp.where(written[:, :, None, None], picked, cache)
+
+
+def attention_prefill_chunk(p: Dict, x: jax.Array, cache: Dict,
+                            pos: jax.Array, cfg: ModelConfig, *,
+                            window: Optional[int] = None,
+                            impl: str = "auto") -> Tuple[jax.Array, Dict]:
+    """Chunked-prefill continuation (docs/ARCHITECTURE.md §5): process
+    ``T`` new tokens ``x`` (B,T,d) starting at absolute position ``pos``
+    (B,) against a dense decode cache previously filled up to ``pos``.
+
+    Each chunk query attends (a) the cache contents earlier chunks wrote
+    and (b) the causal prefix of its own chunk — exactly the positions a
+    full-sequence prefill attends, so chunking is math-identical to
+    :func:`attention_full` per query row. The chunk's K/V is then written
+    into the cache (linear: rows pos..pos+T-1; windowed: ring slots
+    modulo the capacity) leaving the same state sequential decode writes
+    would leave."""
+    B, T, _ = x.shape
+    C = cache["k"].shape[1]
+    q_pos = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _project_qkv(p, x, cfg, q_pos)
+    slots = jnp.arange(C, dtype=jnp.int32)[None, :]
+    if window is not None:
+        # ring: slot s holds the largest p <= pos-1 with p % C == s
+        prev = pos[:, None] - 1
+        k_pos_old = prev - ((prev - slots) % C)
+        old_valid = k_pos_old >= 0
+    else:
+        k_pos_old = jnp.broadcast_to(slots, (B, C))
+        old_valid = slots < pos[:, None]
+    old_mask = old_valid[:, None, :] & _causal_mask(q_pos, k_pos_old, window)
+    chunk_mask = _causal_mask(q_pos, q_pos, window)
+    k_cat = jnp.concatenate([cache["k"], k_new], axis=1)
+    v_cat = jnp.concatenate([cache["v"], v_new], axis=1)
+    mask = jnp.concatenate([old_mask, chunk_mask], axis=2)
+    scale = 1.0 / float(cfg.head_dim) ** 0.5
+    out = _sdpa(q, k_cat, v_cat, mask, scale)
+    write = _write_chunk_ring if window is not None else _write_chunk_linear
+    cache = {"k": write(cache["k"], k_new, pos),
+             "v": write(cache["v"], v_new, pos)}
+    return out.reshape(B, T, -1) @ p["wo"], cache
+
+
 def attention_decode(p: Dict, x: jax.Array, cache: Dict, pos: jax.Array,
                      cfg: ModelConfig, *, window: Optional[int] = None,
                      impl: str = "auto") -> Tuple[jax.Array, Dict]:

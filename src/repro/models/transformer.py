@@ -189,6 +189,33 @@ def _layer_decode(p: Dict, x: jax.Array, cfg: ModelConfig, kind: str,
     return x + y, new_cache
 
 
+def _layer_chunk(p: Dict, x: jax.Array, cfg: ModelConfig, kind: str,
+                 cache: Dict, ctx: Dict) -> Tuple[jax.Array, Dict]:
+    """Chunked-prefill continuation layer (docs/ARCHITECTURE.md §5):
+    process T tokens starting at ``ctx["pos"]`` against a dense decode
+    cache. Recurrent layers run their sequence form from the carried
+    state; attention layers attend cache + causal chunk prefix."""
+    window = _window_for(cfg, kind)
+    if kind == "rwkv":
+        return rk.rwkv_block(p, x, cfg, cache, decode=False,
+                             norm_kind=cfg.norm)
+    if kind == "rglru":
+        h = apply_norm(p["rec"]["norm"], x, cfg.norm)
+        out, new_state = rg.rglru_seq(p["rec"], h, cfg, cache)
+        x = x + out
+        new_cache = new_state
+    else:
+        h = apply_norm(p["attn_norm"], x, cfg.norm)
+        out, kv = attn.attention_prefill_chunk(
+            p["attn"], h, {"k": cache["k"], "v": cache["v"]}, ctx["pos"],
+            cfg, window=window, impl=ctx["attn_impl"])
+        x = x + out
+        new_cache = dict(kv)
+    h = apply_norm(p["ffn_norm"], x, cfg.norm)
+    y, _ = _ffn_apply(p["ffn"], h, cfg, kind)
+    return x + y, new_cache
+
+
 def _window_for(cfg: ModelConfig, kind: str) -> Optional[int]:
     if kind == "local_attn":
         return cfg.sliding_window or 2048
@@ -300,6 +327,32 @@ def _trunk_decode(params: Dict, x: jax.Array, cfg: ModelConfig,
         tail_caches = []
         for p_l, kind, c_l in zip(params["tail"], tail_kinds, cache["tail"]):
             x, c = _layer_decode(p_l, x, cfg, kind, c_l, ctx)
+            tail_caches.append(c)
+        new_cache["tail"] = tuple(tail_caches)
+    return x, new_cache
+
+
+def _trunk_chunk(params: Dict, x: jax.Array, cfg: ModelConfig,
+                 cache: Dict, ctx: Dict) -> Tuple[jax.Array, Dict]:
+    n_units, tail_kinds = _split_layers(cfg)
+    new_cache: Dict[str, Any] = {}
+    if n_units:
+        def unit_body(x, scanned):
+            unit_params, unit_cache = scanned
+            new_unit_cache = []
+            for pos, kind in enumerate(cfg.block_pattern):
+                x, c = _layer_chunk(unit_params[pos], x, cfg, kind,
+                                    unit_cache[pos], ctx)
+                new_unit_cache.append(c)
+            return x, tuple(new_unit_cache)
+
+        x, unit_caches = jax.lax.scan(
+            unit_body, x, (params["units"], cache["units"]))
+        new_cache["units"] = unit_caches
+    if tail_kinds:
+        tail_caches = []
+        for p_l, kind, c_l in zip(params["tail"], tail_kinds, cache["tail"]):
+            x, c = _layer_chunk(p_l, x, cfg, kind, c_l, ctx)
             tail_caches.append(c)
         new_cache["tail"] = tuple(tail_caches)
     return x, new_cache
@@ -613,6 +666,29 @@ class Model:
         x, _, cache = _trunk_full(params, x, cfg, ctx, remat=False)
         logits = _lm_logits(params, x[:, -1:, :], cfg)
         return logits, cache
+
+    # ---- forward: chunked prefill ---------------------------------------
+    def prefill_chunk(self, params, cache, batch):
+        """Chunked-prefill continuation (docs/ARCHITECTURE.md §5):
+        ``batch = {"tokens": (B,T), "pos": (B,)}`` processes T tokens
+        starting at absolute position ``pos`` against a DENSE decode
+        cache previously filled up to ``pos`` (zeros on first chunk).
+        Returns (last-position logits, cache). Attention attends exactly
+        the positions a full prefill attends, recurrent layers run their
+        sequence form from the carried state — so a prompt processed in
+        chunks is math-identical to one processed in a single prefill.
+        Frontend/encoder-decoder inputs are not supported (the
+        continuous engine gates them to the single-shot prefill path)."""
+        cfg = self.cfg
+        if cfg.enc_dec or cfg.frontend is not None:
+            raise NotImplementedError(
+                "prefill_chunk supports plain token prompts only")
+        params = self._cast(params)
+        x = apply_embed(params["embed"], batch["tokens"])
+        ctx = {"pos": batch["pos"], "attn_impl": self.attn_impl}
+        x, new_cache = _trunk_chunk(params, x, cfg, cache, ctx)
+        logits = _lm_logits(params, x[:, -1:, :], cfg)
+        return logits, new_cache
 
     # ---- forward: decode -----------------------------------------------
     def decode_step(self, params, cache, batch):

@@ -187,8 +187,9 @@ def run_episode(env: EdgeServingEnv, agent,
 #: state vector fed to the per-model pool agents (docs/RUNTIME.md):
 #: [log1p(queue), oldest slack s, own m_c share, total live share,
 #:  log1p(predicted iter ms), log1p(Eq.-1 slot ms),
-#:  KV budget headroom frac (1.0 for dense/unlimited pools)]
-POOL_STATE_DIM = 7
+#:  KV budget headroom frac (1.0 for dense/unlimited pools),
+#:  log1p(prefill backlog tokens), log1p(preemptions since last decision)]
+POOL_STATE_DIM = 9
 
 
 class PoolScheduler:
@@ -220,6 +221,9 @@ class PoolScheduler:
         self.agents = agents
         self._last: Dict[str, tuple] = {}      # model -> (state, action)
         self._since: Dict[str, list] = {m: [] for m in pool.configs}
+        #: per-model preemption counter at the last decision (the state
+        #: vector feeds the delta, docs/RUNTIME.md §8)
+        self._preempt_seen: Dict[str, int] = {m: 0 for m in pool.configs}
 
     # ---- feedback --------------------------------------------------------
     def record(self, results) -> None:
@@ -256,6 +260,9 @@ class PoolScheduler:
             committed = occ["committed_blocks"] * p.block_size
             headroom = max(0.0, 1.0 - max(occ["used_tokens"], committed)
                            / occ["budget_tokens"])
+        preempts = getattr(p, "preempts_by_model", {}).get(model, 0)
+        new_preempts = preempts - self._preempt_seen.get(model, 0)
+        self._preempt_seen[model] = preempts
         return np.array([
             np.log1p(p.queue_len(model)),
             slack / 1000.0,
@@ -264,6 +271,8 @@ class PoolScheduler:
             np.log1p(max(pred, 0.0)),
             np.log1p(max(p.slot_ms(model), 0.0)),
             headroom,
+            np.log1p(max(0, p.prefill_backlog_tokens(model))),
+            np.log1p(max(0, new_preempts)),
         ], np.float32)
 
     def _kv_feasible(self, model: str, b: int, m_c: int) -> bool:
@@ -288,7 +297,15 @@ class PoolScheduler:
         need = lm.predicted_kv_tokens(tps, b * m_c)
         return need + used_others <= budget
 
-    def _feasible(self, model: str, b: int, m_c: int) -> bool:
+    def _iter_budget_ms(self, model: str) -> float:
+        """Per-iteration share of the most urgent request's slack."""
+        slack = self.pool.oldest_slack_ms(model)
+        if slack == float("inf"):
+            slack = self.slo_ms.get(model, 1000.0)
+        return max(slack, 2.0) / self.decode_steps_mean
+
+    def _feasible(self, model: str, b: int, m_c: int,
+                  token_budget: int = 0) -> bool:
         """Eq.-1 feasibility per iteration at the PROPOSED overlap: the
         calibrated contention model's predicted pool-iteration latency
         must fit the most urgent request's per-iteration budget. The
@@ -296,46 +313,65 @@ class PoolScheduler:
         against) at the proposed concurrency. The b axis does not enter
         the contention model, but it does enter the KV-budget guard
         (``_kv_feasible``), the real-occupancy counterpart of the
-        simulator's Eq.-4 memory check."""
+        simulator's Eq.-4 memory check.
+
+        A nonzero ``token_budget`` is additionally priced by the
+        token-cost fit (docs/RUNTIME.md §8): one iteration doing
+        ``token_budget`` tokens of prefill+decode work must also fit the
+        per-iteration budget — this is what makes the Eq.-1 guard REAL
+        for long-prompt admissions instead of advisory."""
         if not self._kv_feasible(model, b, m_c):
             return False
+        budget = self._iter_budget_ms(model)
         t1, c = self.pool.contention()
-        if t1 <= 0.0:
-            return True  # not calibrated yet: trust the agent
-        busy_others = self.pool.busy_count() - sum(
-            1 for i in self.pool.live(model) if i.n_resident > 0)
-        pred_ms = lm.predicted_iter_ms(t1, c, max(1, busy_others + m_c))
-        slack = self.pool.oldest_slack_ms(model)
-        if slack == float("inf"):
-            slack = self.slo_ms.get(model, 1000.0)
-        budget = max(slack, 2.0) / self.decode_steps_mean
-        return pred_ms <= budget
+        if t1 > 0.0:
+            busy_others = self.pool.busy_count() - sum(
+                1 for i in self.pool.live(model) if i.n_resident > 0)
+            if lm.predicted_iter_ms(t1, c, max(1, busy_others + m_c)) \
+                    > budget:
+                return False
+        if token_budget > 0:
+            base, per_tok = self.pool.token_cost()
+            if per_tok > 0.0 and lm.predicted_token_iter_ms(
+                    base, per_tok, token_budget) > budget:
+                return False
+        return True
 
     def _apply(self, model: str, a: int) -> int:
         cfg = self.cfg
-        b, m_c = cfg.action_to_pair(a)
+        b, m_c, tb = cfg.action_to_triple(a)
         # under backlog the guard steps aside (same rationale as the
         # simulator path: only throughput clears an old queue)
         slo = self.slo_ms.get(model, 1000.0)
         backlog = self.pool.oldest_slack_ms(model) < 0.5 * slo
-        if self.guard and not backlog and not self._feasible(model, b, m_c):
+        if self.guard and not backlog and \
+                not self._feasible(model, b, m_c, tb):
             self.guard_interventions += 1
             bs_levels = list(cfg.batch_sizes)
             ms = list(cfg.concurrency_levels)
-            bi, mi = bs_levels.index(b), ms.index(m_c)
-            # degrade concurrency first (it both contends and multiplies
-            # KV residency), then batch
-            while mi > 0 or bi > 0:
-                if mi > 0:
+            # token budgets ordered most→least iteration work (0 =
+            # uncapped sorts first); degrading walks toward tighter caps
+            tbs = sorted(cfg.token_budgets,
+                         key=lambda t: float("inf") if t == 0 else t,
+                         reverse=True)
+            bi, mi, ti = bs_levels.index(b), ms.index(m_c), tbs.index(tb)
+            # degrade the token budget first (a tighter cap bounds the
+            # iteration without shedding capacity), then concurrency (it
+            # both contends and multiplies KV residency), then batch
+            while ti < len(tbs) - 1 or mi > 0 or bi > 0:
+                if ti < len(tbs) - 1:
+                    ti += 1
+                elif mi > 0:
                     mi -= 1
-                elif bi > 0:
+                else:
                     bi -= 1
-                if self._feasible(model, bs_levels[bi], ms[mi]):
+                if self._feasible(model, bs_levels[bi], ms[mi], tbs[ti]):
                     break
-            b, m_c = bs_levels[bi], ms[mi]
+            b, m_c, tb = bs_levels[bi], ms[mi], tbs[ti]
         self.pool.set_slot_cap(model, b)
         self.pool.scale_to(model, m_c)
-        return cfg.pair_to_action(b, m_c)
+        self.pool.set_token_budget(model, tb or None)
+        return cfg.triple_to_action(b, m_c, tb)
 
     # ---- decision epoch --------------------------------------------------
     def control(self) -> Dict[str, tuple]:

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +48,10 @@ def _bucket(n: int, buckets=(1, 2, 4, 8, 16, 32, 64, 128)) -> int:
 
 
 SEQ_BUCKETS = (16, 32, 64, 128, 256, 512)
+
+#: largest chunked-prefill piece; pieces are powers of two up to this, so
+#: the chunk compile cache is bounded at one shape per piece size
+_MAX_CHUNK = 512
 
 
 def make_prefill_batch(cfg: ModelConfig, prompts: List[np.ndarray]
@@ -160,6 +164,10 @@ class BlockAllocator:
       * ``n_free - n_reserved == n_available >= 0`` at all times;
       * every id is either free or owned by exactly one slot;
       * the null block 0 is never allocated.
+
+    ``free`` verifies ownership against the outstanding-id set and raises
+    on a double free (or a duplicate id within one call) — a silently
+    re-freed id would hand the same physical block to two sequences.
     """
 
     def __init__(self, n_blocks: int, block_size: int):
@@ -168,6 +176,7 @@ class BlockAllocator:
         self.n_blocks = n_blocks
         self.block_size = block_size
         self._free = list(range(n_blocks, 0, -1))  # pop() -> low ids first
+        self._outstanding: Set[int] = set()
         self.n_reserved = 0
 
     @property
@@ -198,16 +207,36 @@ class BlockAllocator:
         """Convert one previously reserved block into a physical id."""
         assert self.n_reserved > 0, "alloc without reservation"
         self.n_reserved -= 1
-        return self._free.pop()
+        bid = self._free.pop()
+        self._outstanding.add(bid)
+        return bid
 
     def free(self, ids: List[int]) -> None:
-        assert all(0 < i <= self.n_blocks for i in ids)
+        """Return ``ids`` to the free list. Raises ``ValueError`` on an
+        out-of-range id, a duplicate within ``ids``, or a double free
+        (an id that is not currently allocated) — any of which would
+        corrupt the free list and alias one physical block to two
+        sequences."""
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate block ids in free(): {ids}")
+        for i in ids:
+            if not 0 < i <= self.n_blocks:
+                raise ValueError(
+                    f"block id {i} outside 1..{self.n_blocks}")
+            if i not in self._outstanding:
+                raise ValueError(
+                    f"double free of block {i}: not currently allocated")
+        self._outstanding.difference_update(ids)
         self._free.extend(ids)
 
 
 @dataclasses.dataclass
 class _Slot:
-    """One KV-cache slot: the sequence currently decoding in batch row i."""
+    """One KV-cache slot: the sequence prefilling or decoding in batch
+    row i. The chunked-prefill state machine lives here: an admitted
+    sequence starts PREFILLING (``prefill_pos < len(seq_tokens)``),
+    advances by budget-bounded chunks into its ``staging`` cache, and
+    becomes DECODING once the graft lands (docs/ARCHITECTURE.md §5)."""
     request_id: int = -1
     remaining: int = 0          # tokens still to emit
     n_emitted: int = 0
@@ -218,10 +247,55 @@ class _Slot:
     # admission reservation remain unallocated (alloc-on-decode-boundary)
     blocks: List[int] = dataclasses.field(default_factory=list)
     n_outstanding: int = 0
+    # chunked prefill state machine
+    seq_tokens: Optional[np.ndarray] = None  # padded prompt (+ resume ctx)
+    base_len: int = 0           # padded-prompt length at FIRST admission
+    prefill_pos: int = 0        # tokens of seq_tokens processed so far
+    staging: object = None      # single-seq cache chunks accumulate into
+    # accounting satellites
+    requested_new: int = 0      # caller-requested max_new (pre-clamp)
+    truncated: bool = False
+    n_preempted: int = 0
 
     @property
     def active(self) -> bool:
         return self.request_id >= 0
+
+    @property
+    def prefilling(self) -> bool:
+        return self.active and self.seq_tokens is not None \
+            and self.prefill_pos < len(self.seq_tokens)
+
+
+@dataclasses.dataclass
+class PreemptedRequest:
+    """Resumable snapshot of a preempted sequence (recompute-on-resume,
+    docs/RUNTIME.md §8): the padded prompt plus every token emitted so
+    far, re-prefilled in chunks on resume so greedy output is
+    token-identical to an uninterrupted run."""
+    request_id: int
+    seq_tokens: np.ndarray      # padded prompt + emitted tokens so far
+    base_len: int               # emitted tokens = seq_tokens[base_len:]
+    max_new: int                # tokens still to emit
+    submit_s: float
+    requested_new: int
+    truncated: bool
+    n_preempted: int
+
+
+@dataclasses.dataclass
+class _WaitingReq:
+    """One queued admission: a fresh prompt, or (``prepadded``) a
+    preempted sequence whose bucket padding is already baked in."""
+    request_id: int
+    prompt: np.ndarray
+    max_new: int
+    submit_s: float
+    prepadded: bool = False
+    base_len: int = -1          # resumes only
+    requested_new: int = 0
+    truncated: bool = False
+    n_preempted: int = 0
 
 
 @dataclasses.dataclass
@@ -234,6 +308,12 @@ class ContinuousResult:
     admit_s: float
     finish_s: float
     n_iters: int                # decode iterations this sequence was live
+    #: fewer tokens than requested were emitted (submit-time cache-room
+    #: clamp, or the capacity clip at cache_len) — surfaced so callers
+    #: never mistake a truncated completion for a full one
+    truncated: bool = False
+    #: times this sequence was preempted and recomputed
+    n_preempted: int = 0
 
     @property
     def queue_wait_s(self) -> float:
@@ -270,7 +350,8 @@ class ContinuousBatchingEngine:
                  max_seq: int = 256, dtype=jnp.float32, seed: int = 0,
                  share_from: "ContinuousBatchingEngine" = None,
                  kv_layout: str = "dense", block_size: int = 16,
-                 kv_blocks: int = None):
+                 kv_blocks: int = None,
+                 token_budget: Optional[int] = None):
         if cfg.enc_dec:
             # cross-attention K/V is unmasked (_cross_core attends every
             # encoder row), so grafting a shorter prefilled ck/cv into the
@@ -280,10 +361,22 @@ class ContinuousBatchingEngine:
                 "architectures yet; use InferenceEngine")
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {token_budget}")
         self.cfg = cfg
         self.n_slots = max(1, max_slots)
         self.cache_len = max_seq
         self.kv_layout = kv_layout
+        self.dtype = dtype
+        #: per-iteration cap on prefill-chunk + resident-decode tokens
+        #: (docs/ARCHITECTURE.md §5; None = uncapped, prompts prefill in
+        #: one pass of bucket-sized chunks). Mutable between steps — the
+        #: PoolScheduler co-optimises it with (b, m_c).
+        self.token_budget = token_budget
+        #: chunked prefill needs plain token prompts; frontend models
+        #: keep the single-shot prefill admission path (and therefore
+        #: do not support preemption-resume)
+        self.chunked = cfg.frontend is None and not cfg.enc_dec
         if share_from is not None and share_from.cfg == cfg:
             # co-resident instances of the same model share weights and
             # jit caches (docs/RUNTIME.md: spawn must be cheap for the
@@ -292,11 +385,14 @@ class ContinuousBatchingEngine:
             self.model = share_from.model
             self.params = share_from.params
             self._prefill = share_from._prefill
+            self._prefill_chunk = share_from._prefill_chunk
             self._decode = share_from._decode
         else:
             self.model = build_model(cfg, remat=False)
             self.params = self.model.init(jax.random.PRNGKey(seed), dtype)
             self._prefill = jax.jit(self.model.prefill)
+            self._prefill_chunk = jax.jit(self.model.prefill_chunk) \
+                if self.chunked else None
             self._decode = jax.jit(self.model.decode_step)
         if kv_layout == "paged":
             self.block_size = block_size
@@ -321,10 +417,17 @@ class ContinuousBatchingEngine:
         self.pos = np.zeros((self.n_slots,), np.int32)
         self.pending_tok = np.zeros((self.n_slots,), np.int32)
         self.slots = [_Slot() for _ in range(self.n_slots)]
-        self.waiting: List[Tuple[int, np.ndarray, int, float]] = []
+        self.waiting: List[_WaitingReq] = []
         self.n_iters = 0
         self.n_admitted = 0
         self.n_evicted = 0
+        self.n_preempted = 0
+        #: tokens processed by the last step() (prefill chunks + resident
+        #: decode) and whether it compiled a new shape — the pool's
+        #: token-cost calibration reads both (docs/RUNTIME.md §8)
+        self.last_step_tokens = 0
+        self.last_step_compiled = False
+        self._decode_warm = False
         self.prefill_shapes: Set[Tuple[int, int]] = set()
         self._next_id = 0
         self._t0 = time.perf_counter()
@@ -340,6 +443,30 @@ class ContinuousBatchingEngine:
     @property
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.active]
+
+    @property
+    def decoding_slots(self) -> List[int]:
+        """Active slots whose prefill has completed (the rows a decode
+        iteration advances)."""
+        return [i for i, s in enumerate(self.slots)
+                if s.active and not s.prefilling]
+
+    @property
+    def prefilling_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.prefilling]
+
+    @property
+    def prefill_backlog_tokens(self) -> int:
+        """Prompt tokens not yet prefilled: the unprocessed remainder of
+        in-slot chunked prefills plus the padded length of every waiting
+        prompt — a state feature for the scheduler (docs/RUNTIME.md §8)."""
+        backlog = sum(len(s.seq_tokens) - s.prefill_pos
+                      for s in self.slots if s.prefilling)
+        for w in self.waiting:
+            backlog += len(w.prompt) if w.prepadded else \
+                self._frontend_tokens() + _bucket(len(w.prompt),
+                                                  buckets=SEQ_BUCKETS)
+        return backlog
 
     def _frontend_tokens(self) -> int:
         return self.cfg.frontend_tokens if (self.cfg.frontend is not None
@@ -359,20 +486,30 @@ class ContinuousBatchingEngine:
         return self.allocator.blocks_for(
             self._seq_tokens(prompt_len, min(max_new, room)))
 
+    def resume_blocks(self, req: PreemptedRequest) -> int:
+        """Worst-case blocks a preempted sequence reserves on resume:
+        its already-padded context plus the tokens still to emit."""
+        return self.allocator.blocks_for(
+            len(req.seq_tokens) + req.max_new)
+
     def admissible(self, prompt_len: int, max_new: int,
-                   pending_blocks: int = 0) -> bool:
+                   pending_blocks: int = 0,
+                   resume: Optional[PreemptedRequest] = None) -> bool:
         """Could a request of this shape be admitted right now? Dense:
         a free slot. Paged: a free slot AND enough unreserved blocks
         (the real memory constraint, docs/ARCHITECTURE.md §5).
         ``pending_blocks`` debits blocks a caller has already promised
         to earlier requests it routed this pass but that the engine has
-        not reserved yet (reservation happens inside ``admit``)."""
+        not reserved yet (reservation happens inside ``admit``). With
+        ``resume`` the block need is the preempted sequence's padded
+        context instead of the fresh-prompt shape."""
         if not self.free_slots:
             return False
         if self.kv_layout != "paged":
             return True
-        return self.allocator.n_available - pending_blocks \
-            >= self.request_blocks(prompt_len, max_new)
+        need = self.resume_blocks(resume) if resume is not None \
+            else self.request_blocks(prompt_len, max_new)
+        return self.allocator.n_available - pending_blocks >= need
 
     # ---- admission -------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 8) -> int:
@@ -382,7 +519,10 @@ class ContinuousBatchingEngine:
         ``cache_len`` budget. Transient pressure (no free slot, or — in
         the paged layout — no free blocks) just keeps it queued; the
         paged admission gate is the allocator's free-block count, not
-        dense ``cache_len`` headroom."""
+        dense ``cache_len`` headroom. A ``max_new_tokens`` that exceeds
+        the remaining cache room is clamped, and the clamp is RECORDED:
+        the finished ``ContinuousResult`` carries ``truncated=True`` so
+        callers never mistake a shortened completion for a full one."""
         S = _bucket(len(prompt), buckets=SEQ_BUCKETS)
         F = self._frontend_tokens()
         room = self.cache_len - (F + S)
@@ -402,8 +542,32 @@ class ContinuousBatchingEngine:
                     f"{self.allocator.n_blocks}")
         rid = self._next_id
         self._next_id += 1
-        self.waiting.append((rid, np.asarray(prompt, np.int32),
-                             min(max_new_tokens, room), self._now()))
+        granted = min(max_new_tokens, room)
+        self.waiting.append(_WaitingReq(
+            rid, np.asarray(prompt, np.int32), granted, self._now(),
+            requested_new=max_new_tokens,
+            truncated=granted < max_new_tokens))
+        return rid
+
+    def submit_resume(self, req: PreemptedRequest) -> int:
+        """Re-queue a preempted sequence (possibly from another engine
+        instance of the same model). A fresh engine request id is
+        allocated — the caller correlates via its own bookkeeping; the
+        engine-internal ``preempt(requeue=True)`` path keeps the original
+        id instead. The padded context always fits ``cache_len`` because
+        ``len(seq_tokens) + max_new`` equals the original admitted
+        footprint."""
+        if not self.chunked:
+            raise NotImplementedError(
+                "preemption-resume needs the chunked-prefill path "
+                "(plain token prompts)")
+        rid = self._next_id
+        self._next_id += 1
+        self.waiting.append(_WaitingReq(
+            rid, np.asarray(req.seq_tokens, np.int32), req.max_new,
+            req.submit_s, prepadded=True, base_len=req.base_len,
+            requested_new=req.requested_new, truncated=req.truncated,
+            n_preempted=req.n_preempted))
         return rid
 
     def _graft(self, one_cache, slot: int, block_ids=None) -> None:
@@ -429,10 +593,14 @@ class ContinuousBatchingEngine:
 
         def graft_paged(full_c, one_c, stacked: bool):
             ids = jnp.asarray(block_ids, jnp.int32)
+            # a chunked-prefill staging cache is cache_len long; only the
+            # rows the allocated blocks cover are scattered (the written
+            # prefix always fits them, the rest is zeros)
+            cap = len(block_ids) * self.block_size
             scatter = scatter_blocks_stacked if stacked else scatter_blocks
             return {key: scatter(full_c[key],
-                                 one_c[key][:, 0] if stacked
-                                 else one_c[key][0], ids)
+                                 one_c[key][:, 0, :cap] if stacked
+                                 else one_c[key][0, :cap], ids)
                     for key in ("k", "v")}
 
         paged = self.kv_layout == "paged"
@@ -456,7 +624,14 @@ class ContinuousBatchingEngine:
         self.cache = new
 
     def admit(self) -> int:
-        """Prefill waiting prompts into free slots. Returns #admissions.
+        """Move waiting prompts into free slots. Returns #admissions.
+
+        Chunked engines (plain token prompts) only ASSIGN the slot here —
+        reserve blocks, build the padded token sequence, allocate the
+        staging cache — and the prefill itself advances in budget-bounded
+        chunks inside ``step()`` (docs/ARCHITECTURE.md §5), so admission
+        never blocks resident decodes for a whole prompt. Frontend
+        models keep the single-shot inline prefill.
 
         Paged layout: FIFO admission is additionally gated on the
         allocator — the head request's worst-case block count
@@ -466,58 +641,207 @@ class ContinuousBatchingEngine:
         n = 0
         free = self.free_slots
         while self.waiting and free:
-            rid, prompt, max_new, submit_s = self.waiting[0]
+            w = self.waiting[0]
+            if w.prepadded:
+                seq = w.prompt
+                base_len = w.base_len
+            else:
+                S = _bucket(len(w.prompt), buckets=SEQ_BUCKETS)
+                F = self._frontend_tokens()
+                base_len = F + S
+                seq = None
+                if self.chunked:
+                    seq = np.zeros((S,), np.int32)
+                    seq[S - len(w.prompt):] = w.prompt
             reserved = 0
             if self.kv_layout == "paged":
-                reserved = self.allocator.blocks_for(
-                    self._seq_tokens(len(prompt), max_new))
+                need_tokens = len(seq) + w.max_new if seq is not None \
+                    else self._seq_tokens(len(w.prompt), w.max_new)
+                reserved = self.allocator.blocks_for(need_tokens)
                 if not self.allocator.reserve(reserved):
                     break  # FIFO: head of queue blocks on memory
             self.waiting.pop(0)
             slot = free.pop(0)
-            batch, S, _ = make_prefill_batch(self.cfg, [prompt])
-            self.prefill_shapes.add(tuple(batch["tokens"].shape))
-            logits, one_cache = self._prefill(self.params, batch)
-            F = 0
-            if self.cfg.frontend is not None and not self.cfg.enc_dec:
-                F = batch["frontend_embeds"].shape[1]
-            if self.kv_layout == "paged":
-                # physically allocate the prefill prefix now; the decode
-                # tail of the reservation is claimed lazily at block
-                # boundaries in step()
-                n0 = self.allocator.blocks_for(F + S)
-                ids = [self.allocator.alloc_reserved() for _ in range(n0)]
-                self.block_tables[slot, :n0] = ids
-                self._graft(one_cache, slot, block_ids=ids)
+            if self.chunked:
+                n0 = 0
+                ids: List[int] = []
+                if self.kv_layout == "paged":
+                    # physically allocate the prefill prefix now; the
+                    # decode tail of the reservation is claimed lazily at
+                    # block boundaries in step(). block_tables stays on
+                    # the null block until the graft lands.
+                    n0 = self.allocator.blocks_for(len(seq))
+                    ids = [self.allocator.alloc_reserved()
+                           for _ in range(n0)]
                 self.slots[slot] = _Slot(
-                    request_id=rid, remaining=max_new, submit_s=submit_s,
-                    admit_s=self._now(), blocks=ids,
-                    n_outstanding=reserved - n0)
+                    request_id=w.request_id, remaining=w.max_new,
+                    submit_s=w.submit_s, admit_s=self._now(), blocks=ids,
+                    n_outstanding=reserved - n0, seq_tokens=seq,
+                    base_len=base_len, prefill_pos=0,
+                    staging=self.model.init_cache(1, self.cache_len,
+                                                  self.dtype),
+                    requested_new=w.requested_new, truncated=w.truncated,
+                    n_preempted=w.n_preempted)
+                self.pos[slot] = 0
             else:
-                self._graft(one_cache, slot)
-                self.slots[slot] = _Slot(request_id=rid, remaining=max_new,
-                                         submit_s=submit_s,
-                                         admit_s=self._now())
-            self.pos[slot] = F + S
-            self.pending_tok[slot] = int(np.asarray(
-                jnp.argmax(logits[0, -1, :], -1)))
+                self._admit_inline(w, slot, reserved)
             self.n_admitted += 1
             n += 1
         return n
 
+    def _admit_inline(self, w: _WaitingReq, slot: int,
+                      reserved: int) -> None:
+        """Legacy single-shot prefill admission (frontend models only:
+        their prompt carries frontend embeds the chunk path cannot
+        replicate). Blocks every resident decode for the whole prefill."""
+        batch, S, _ = make_prefill_batch(self.cfg, [w.prompt])
+        self.prefill_shapes.add(tuple(batch["tokens"].shape))
+        logits, one_cache = self._prefill(self.params, batch)
+        F = 0
+        if self.cfg.frontend is not None and not self.cfg.enc_dec:
+            F = batch["frontend_embeds"].shape[1]
+        if self.kv_layout == "paged":
+            n0 = self.allocator.blocks_for(F + S)
+            ids = [self.allocator.alloc_reserved() for _ in range(n0)]
+            self.block_tables[slot, :n0] = ids
+            self._graft(one_cache, slot, block_ids=ids)
+            self.slots[slot] = _Slot(
+                request_id=w.request_id, remaining=w.max_new,
+                submit_s=w.submit_s, admit_s=self._now(), blocks=ids,
+                n_outstanding=reserved - n0,
+                requested_new=w.requested_new, truncated=w.truncated)
+        else:
+            self._graft(one_cache, slot)
+            self.slots[slot] = _Slot(
+                request_id=w.request_id, remaining=w.max_new,
+                submit_s=w.submit_s, admit_s=self._now(),
+                requested_new=w.requested_new, truncated=w.truncated)
+        self.pos[slot] = F + S
+        self.pending_tok[slot] = int(np.asarray(
+            jnp.argmax(logits[0, -1, :], -1)))
+
+    # ---- chunked prefill (docs/ARCHITECTURE.md §5) -----------------------
+    def _prefill_step(self, budget_left: int) -> int:
+        """Advance in-slot chunked prefills by at most ``budget_left``
+        tokens (power-of-two chunk pieces so the compile cache stays
+        bounded at one shape per piece size). Returns tokens processed.
+        A slot whose last chunk lands is grafted and joins the decode
+        batch of this same iteration."""
+        done_tokens = 0
+        for i in list(self.prefilling_slots):
+            s = self.slots[i]
+            logits = None
+            while s.prefilling and budget_left > 0:
+                rem = len(s.seq_tokens) - s.prefill_pos
+                c = min(rem, budget_left, _MAX_CHUNK)
+                c = 1 << (c.bit_length() - 1)  # largest power of two <= c
+                toks = s.seq_tokens[s.prefill_pos:s.prefill_pos + c]
+                shape = (c, self.cache_len)
+                if shape not in self.prefill_shapes:
+                    self.prefill_shapes.add(shape)
+                    self.last_step_compiled = True
+                logits, s.staging = self._prefill_chunk(
+                    self.params, s.staging,
+                    {"tokens": jnp.asarray(toks[None, :]),
+                     "pos": jnp.asarray([s.prefill_pos], jnp.int32)})
+                s.prefill_pos += c
+                budget_left -= c
+                done_tokens += c
+            if logits is not None and not s.prefilling:
+                self._finish_prefill(i, logits)
+        return done_tokens
+
+    def _finish_prefill(self, slot: int, logits) -> None:
+        """Last chunk landed: graft the staging cache into the slot (and,
+        paged, point the block table at the allocated prefix blocks),
+        then hand the slot to the decode loop."""
+        s = self.slots[slot]
+        if self.kv_layout == "paged":
+            self.block_tables[slot, :len(s.blocks)] = s.blocks
+            self._graft(s.staging, slot, block_ids=s.blocks)
+        else:
+            self._graft(s.staging, slot)
+        s.staging = None
+        self.pos[slot] = s.prefill_pos
+        self.pending_tok[slot] = int(np.asarray(
+            jnp.argmax(logits[0, -1, :], -1)))
+
+    # ---- preemption (docs/RUNTIME.md §8) ---------------------------------
+    def preemption_candidates(self) -> List[Tuple[int, int, int]]:
+        """(slot, request_id, freeable_blocks) for every preemptible
+        resident — decoding slots only, never a mid-chunk prefill (its
+        staging work would be thrown away and re-bought immediately)."""
+        if not self.chunked:
+            return []
+        return [(i, s.request_id, len(s.blocks) + s.n_outstanding)
+                for i, s in enumerate(self.slots)
+                if s.active and not s.prefilling]
+
+    def preempt(self, slot: int, requeue: bool = True) -> PreemptedRequest:
+        """Evict the resident sequence in ``slot`` back to a waiting
+        queue, returning its blocks (and the unconsumed reservation
+        tail) to the allocator immediately. The returned snapshot
+        resumes by re-prefilling the padded prompt plus every token
+        emitted so far — greedy output is token-identical to an
+        uninterrupted run (asserted in tests/test_preemption.py).
+
+        ``requeue=True`` reinserts at the head of THIS engine's FIFO
+        (standalone use); a pool passes ``requeue=False`` and routes the
+        snapshot through its own EDF queue (``submit_resume``)."""
+        s = self.slots[slot]
+        if not s.active:
+            raise ValueError(f"slot {slot} holds no sequence")
+        if s.prefilling:
+            raise ValueError("cannot preempt a mid-chunk prefill")
+        if not self.chunked:
+            raise NotImplementedError(
+                "preemption needs the chunked-prefill path "
+                "(plain token prompts)")
+        seq = np.concatenate([s.seq_tokens,
+                              np.asarray(s.tokens, np.int32)])
+        req = PreemptedRequest(
+            s.request_id, seq, base_len=s.base_len, max_new=s.remaining,
+            submit_s=s.submit_s, requested_new=s.requested_new,
+            truncated=s.truncated, n_preempted=s.n_preempted + 1)
+        if self.kv_layout == "paged":
+            self.allocator.free(s.blocks)
+            self.allocator.unreserve(s.n_outstanding)
+            self.block_tables[slot, :] = 0
+        self.pos[slot] = 0
+        self.slots[slot] = _Slot()
+        self.n_preempted += 1
+        if requeue:
+            self.waiting.insert(0, _WaitingReq(
+                req.request_id, req.seq_tokens, req.max_new, req.submit_s,
+                prepadded=True, base_len=req.base_len,
+                requested_new=req.requested_new, truncated=req.truncated,
+                n_preempted=req.n_preempted))
+        return req
+
     # ---- iteration -------------------------------------------------------
     def step(self) -> List[ContinuousResult]:
-        """One decode iteration over all slots; admits first, evicts after.
+        """One engine iteration: admit, advance chunked prefills under
+        the per-iteration token budget, then ONE decode iteration over
+        all slots; evicts after.
 
-        Returns the sequences that finished this iteration. Inactive
-        slots decode a dummy token in place (their cache row is masked by
-        ``pos`` and overwritten at the next admission), keeping the
-        compiled decode shape fixed at (n_slots, 1).
+        The token budget caps prefill-chunk tokens plus resident decode
+        tokens, so iteration latency stays bounded no matter how long
+        the queued prompts are (docs/ARCHITECTURE.md §5). Returns the
+        sequences that finished this iteration. Inactive slots decode a
+        dummy token in place (their cache row is masked by ``pos`` and
+        overwritten at the next admission), keeping the compiled decode
+        shape fixed at (n_slots, 1).
         """
+        self.last_step_compiled = False
         self.admit()
-        active = self.active_slots
+        n_dec = len(self.decoding_slots)
+        budget = self.token_budget if self.token_budget is not None \
+            else 1 << 62
+        self.last_step_tokens = self._prefill_step(max(0, budget - n_dec))
+        active = self.decoding_slots
         if not active:
             return []
+        self.last_step_tokens += len(active)
         for i in active:
             s = self.slots[i]
             s.tokens.append(int(self.pending_tok[i]))
@@ -538,6 +862,9 @@ class ContinuousBatchingEngine:
                     self.block_tables[i, len(s.blocks)] = bid
                     s.blocks.append(bid)
             batch["block_tables"] = jnp.asarray(self.block_tables)
+        if not self._decode_warm:
+            self._decode_warm = True
+            self.last_step_compiled = True
         logits, self.cache = self._decode(self.params, self.cache, batch)
         nxt = np.asarray(jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32))
         self.n_iters += 1
@@ -545,14 +872,22 @@ class ContinuousBatchingEngine:
         now = self._now()
         for i in active:
             s = self.slots[i]
-            # stay inside the cache: clip sequences at capacity
-            if self.pos[i] + 1 >= self.cache_len:
+            # stay inside the cache: clip sequences at capacity (and
+            # record the truncation — the caller asked for more tokens)
+            if self.pos[i] + 1 >= self.cache_len and s.remaining > 0:
+                s.truncated = True
                 s.remaining = 0
             if s.remaining <= 0:
+                emitted = s.tokens
+                if s.seq_tokens is not None and s.base_len < len(s.seq_tokens):
+                    # resumed sequence: tokens emitted before the
+                    # preemption live in the re-prefilled context
+                    emitted = list(s.seq_tokens[s.base_len:]) + s.tokens
                 finished.append(ContinuousResult(
-                    s.request_id, np.asarray(s.tokens, np.int32),
+                    s.request_id, np.asarray(emitted, np.int32),
                     submit_s=s.submit_s, admit_s=s.admit_s, finish_s=now,
-                    n_iters=s.n_emitted))
+                    n_iters=len(emitted), truncated=s.truncated,
+                    n_preempted=s.n_preempted))
                 if self.kv_layout == "paged":
                     # free-on-evict: blocks return to the pool, the
                     # unconsumed tail of the reservation is cancelled
@@ -583,8 +918,11 @@ class ContinuousBatchingEngine:
     @property
     def kv_used_tokens(self) -> int:
         """Cache positions live sequences actually occupy (written or
-        about to be written next iteration)."""
-        return int(sum(int(self.pos[i]) + 1 for i in self.active_slots))
+        about to be written next iteration); mid-prefill sequences count
+        the staging tokens their chunks have produced so far."""
+        return int(sum(int(self.pos[i]) + 1 for i in self.decoding_slots)
+                   + sum(self.slots[i].prefill_pos
+                         for i in self.prefilling_slots))
 
     @property
     def kv_allocated_tokens(self) -> int:
@@ -621,4 +959,7 @@ class ContinuousBatchingEngine:
                 self.allocator.n_reserved * self.block_size
                 if self.kv_layout == "paged" else 0),
             "queue_depth": float(len(self.waiting)),
+            "n_preempted": float(self.n_preempted),
+            "prefill_backlog_tokens": float(self.prefill_backlog_tokens),
+            "token_budget": float(self.token_budget or 0),
         }

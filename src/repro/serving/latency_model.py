@@ -82,6 +82,21 @@ def estimate_execution(hw: HardwareSpec, model: EdgeModelProfile, b: int,
     return ExecutionEstimate(compute_ms, f, mem, overflow)
 
 
+def _least_squares(xs: Sequence[float], ys: Sequence[float]
+                   ) -> Tuple[float, float]:
+    """Ordinary least squares ``y ≈ intercept + slope * x``. With fewer
+    than two distinct x values the slope is unidentifiable:
+    ``(mean(y), 0.0)`` is returned."""
+    n = len(xs)
+    if len(set(xs)) < 2:
+        return sum(ys) / n, 0.0
+    mx, my = sum(xs) / n, sum(ys) / n
+    sxx = sum((x - mx) ** 2 for x in xs)
+    sxy = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+    slope = sxy / sxx
+    return my - slope * mx, slope
+
+
 def fit_contention(samples: Sequence[Tuple[int, float]]
                    ) -> Tuple[float, float]:
     """Calibrate the linear part of :func:`interference_factor` from
@@ -99,14 +114,7 @@ def fit_contention(samples: Sequence[Tuple[int, float]]
         return 0.0, 0.0
     xs = [float(max(1, n) - 1) for n, _ in samples]
     ys = [float(t) for _, t in samples]
-    n = len(xs)
-    if len(set(xs)) < 2:
-        return sum(ys) / n, 0.0
-    mx, my = sum(xs) / n, sum(ys) / n
-    sxx = sum((x - mx) ** 2 for x in xs)
-    sxy = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
-    slope = sxy / sxx
-    t1 = my - slope * mx
+    t1, slope = _least_squares(xs, ys)
     if t1 <= 1e-9:  # degenerate fit: fall back to the overlap-1 mean
         base = [y for x, y in zip(xs, ys) if x == min(xs)]
         t1 = sum(base) / len(base)
@@ -118,6 +126,39 @@ def predicted_iter_ms(t1_ms: float, contention: float, n_instances: int
     """Iteration latency the :func:`fit_contention` model predicts when
     ``n_instances`` engine instances are live on the host."""
     return t1_ms * (1.0 + contention * max(0, n_instances - 1))
+
+
+def fit_token_cost(samples: Sequence[Tuple[int, float]]
+                   ) -> Tuple[float, float]:
+    """Calibrate per-iteration cost as a function of the tokens the
+    iteration actually processed (docs/RUNTIME.md §8: the pool records
+    (prefill-chunk + decode tokens, iteration wall ms) pairs, excluding
+    compile iterations).
+
+    Fits ``iter_ms ≈ base + per_token * tokens`` by least squares and
+    returns ``(base_ms, per_token_ms)``. This is what makes the
+    per-iteration token budget a schedulable knob: the guard can price a
+    proposed budget directly instead of assuming iteration cost is
+    independent of prefill work. With fewer than two distinct token
+    counts the slope is unidentifiable and ``per_token_ms = 0.0``.
+    """
+    if not samples:
+        return 0.0, 0.0
+    xs = [float(max(0, t)) for t, _ in samples]
+    ys = [float(ms) for _, ms in samples]
+    base, slope = _least_squares(xs, ys)
+    slope = max(0.0, slope)
+    # re-anchor the intercept to the clamped slope so the prediction
+    # still passes through the sample mean
+    base = max(0.0, sum(ys) / len(ys) - slope * sum(xs) / len(xs))
+    return base, slope
+
+
+def predicted_token_iter_ms(base_ms: float, per_token_ms: float,
+                            tokens: int) -> float:
+    """Iteration latency the :func:`fit_token_cost` model predicts for an
+    iteration processing ``tokens`` (decode + prefill-chunk) tokens."""
+    return base_ms + per_token_ms * max(0, tokens)
 
 
 def fit_occupancy(samples: Sequence[Tuple[int, float]]) -> float:

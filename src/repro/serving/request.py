@@ -26,6 +26,15 @@ class Request:
     decode_steps: int = 1
     #: iterations still to run once admitted (continuous-mode bookkeeping)
     remaining: int = 0
+    #: prompt tokens that must be prefilled before decoding (0 = the
+    #: paper's single-shot regime; >0 models long-prompt arrivals whose
+    #: prefill is chunked under the per-iteration token budget)
+    prefill_tokens: int = 0
+    #: prefill tokens still to process (reset to prompt + emitted context
+    #: on preemption — recompute-on-resume, docs/RUNTIME.md §8)
+    prefill_remaining: int = 0
+    #: times this request was preempted (hysteresis caps it)
+    n_preempted: int = 0
     # filled at dispatch/completion:
     start_ms: Optional[float] = None
     finish_ms: Optional[float] = None
@@ -76,6 +85,17 @@ class RequestQueue:
         if not self._heap:
             return 0.0
         return max(now_ms - r.arrival_ms for _, _, r in self._heap)
+
+    def peek_most_urgent(self, now_ms: float):
+        """(slack_ms, request) of the queued request closest to its
+        deadline — the preemption trigger reads this
+        (docs/RUNTIME.md §8). (inf, None) when empty."""
+        best, slack = None, float("inf")
+        for _, _, r in self._heap:
+            s = r.deadline_ms - now_ms
+            if s < slack:
+                best, slack = r, s
+        return slack, best
 
     def slo_sum_ms(self, b: int) -> float:
         slos = sorted(r.slo_ms for _, _, r in self._heap)[:b]

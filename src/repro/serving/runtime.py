@@ -50,7 +50,7 @@ from repro.config.base import ModelConfig
 from repro.core.interference import engine_features
 from repro.core.utility import utility
 from repro.serving import latency_model as lm
-from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.engine import ContinuousBatchingEngine, PreemptedRequest
 
 # instance lifecycle states (docs/RUNTIME.md state machine)
 STARTING = "starting"
@@ -76,6 +76,11 @@ class PoolRequest:
     max_new_tokens: int
     submit_s: float            # pool clock
     admit_s: float = -1.0      # set by the router at admission
+    #: preempted-sequence snapshot awaiting re-admission; the router
+    #: resumes it via ``engine.submit_resume`` instead of a fresh submit
+    #: (docs/RUNTIME.md §8)
+    resume: Optional[PreemptedRequest] = None
+    n_preempted: int = 0
 
     @property
     def deadline_s(self) -> float:
@@ -155,7 +160,12 @@ class ModelInstancePool:
                  predictor=None, kv_layout: str = "dense",
                  block_size: int = 16,
                  kv_block_budget: Optional[int] = None,
-                 blocks_per_instance: Optional[int] = None):
+                 blocks_per_instance: Optional[int] = None,
+                 preemption: bool = False,
+                 preempt_margin_ms: float = 50.0,
+                 preempt_cooldown_steps: int = 8,
+                 max_preemptions: int = 2,
+                 token_budget: Optional[int] = None):
         self.configs = dict(configs)
         self.max_instances = max_instances
         self.max_slots = max_slots
@@ -176,6 +186,25 @@ class ModelInstancePool:
         #: (``occupancy_tokens_per_seq``) is how a paged pool fits more
         #: instances into the same budget than dense slabs allow.
         self.blocks_per_instance = blocks_per_instance
+        #: SLO-aware preemption policy (docs/RUNTIME.md §8): when the
+        #: most urgent waiting request cannot be admitted anywhere and
+        #: its slack no longer covers its predicted service time, evict
+        #: the largest-slack resident (never a mid-chunk prefill), with
+        #: margin + cooldown + per-request-cap hysteresis against thrash
+        self.preemption = preemption
+        self.preempt_margin_ms = preempt_margin_ms
+        self.preempt_cooldown_steps = preempt_cooldown_steps
+        self.max_preemptions = max_preemptions
+        self.n_preempted = 0
+        self.preempts_by_model: Dict[str, int] = {m: 0 for m in configs}
+        self._last_preempt_step: Dict[str, int] = {}
+        #: per-model per-iteration token budget applied to every live
+        #: engine (None = uncapped); the scheduler's third knob
+        self.token_budgets: Dict[str, Optional[int]] = {
+            m: token_budget for m in configs}
+        #: (tokens processed, iteration wall ms) over non-compiling busy
+        #: iterations — calibrates latency_model.fit_token_cost
+        self.token_samples: List[Tuple[int, float]] = []
         #: (total resident sequences, Σ kv_used_tokens) per pure-decode
         #: iteration — calibrates latency_model.fit_occupancy
         self.occupancy_samples: List[Tuple[int, int]] = []
@@ -287,7 +316,8 @@ class ModelInstancePool:
         tmpl = self._templates.get(model)
         eng = ContinuousBatchingEngine(
             self.configs[model], max_slots=self.max_slots,
-            max_seq=self.max_seq, seed=self.seed, share_from=tmpl, **kw)
+            max_seq=self.max_seq, seed=self.seed, share_from=tmpl,
+            token_budget=self.token_budgets.get(model), **kw)
         if tmpl is None:
             self._templates[model] = eng
         inst = ModelInstance(self._next_iid, model, eng, kv_blocks=grant)
@@ -334,6 +364,23 @@ class ModelInstancePool:
         instance at ``min(b, max_slots)`` (engine slot count is fixed at
         construction; the router enforces the cap at admission)."""
         self.slot_caps[model] = max(1, min(b, self.max_slots))
+
+    def set_token_budget(self, model: str, budget: Optional[int]) -> None:
+        """The third knob (docs/RUNTIME.md §8): per-iteration cap on
+        prefill-chunk + decode tokens, applied to every live engine of
+        ``model`` and inherited by future spawns. ``None`` (or 0) lifts
+        the cap."""
+        budget = budget or None
+        self.token_budgets[model] = budget
+        for inst in self.instances[model]:
+            if inst.engine is not None:
+                inst.engine.token_budget = budget
+
+    def prefill_backlog_tokens(self, model: Optional[str] = None) -> int:
+        """Prompt tokens queued or mid-chunk across the live instances of
+        ``model`` (or all models) — a scheduler state feature."""
+        return sum(i.engine.prefill_backlog_tokens
+                   for i in self.live(model))
 
     def _sweep(self) -> None:
         """DRAINING instances with no resident work → RETIRED; the engine
@@ -385,6 +432,15 @@ class ModelInstancePool:
             return float("inf")
         return (self.queues[model][0][0] - self.now()) * 1000.0
 
+    def _request_blocks(self, eng: ContinuousBatchingEngine,
+                        req: PoolRequest) -> int:
+        """Worst-case block need of ``req`` on ``eng`` — the resumed
+        context for a preempted sequence, the fresh-prompt shape
+        otherwise."""
+        if req.resume is not None:
+            return eng.resume_blocks(req.resume)
+        return eng.request_blocks(len(req.prompt), req.max_new_tokens)
+
     def _never_admissible(self, model: str, req: PoolRequest) -> bool:
         """True when ``req``'s worst-case block reservation exceeds every
         grant this pool could ever field for ``model`` — the largest
@@ -396,10 +452,62 @@ class ModelInstancePool:
         insts = self.running(model)
         if not insts:
             return False
-        need = insts[0].engine.request_blocks(len(req.prompt),
-                                              req.max_new_tokens)
+        need = self._request_blocks(insts[0].engine, req)
         cap = max(i.engine.allocator.n_blocks for i in insts)
         return need > max(cap, self._spawn_grant())
+
+    # ---- SLO-aware preemption (docs/RUNTIME.md §8) -----------------------
+    def _try_preempt(self, model: str, req: PoolRequest,
+                     now: float) -> bool:
+        """Preempt one resident of ``model`` to make room for the urgent
+        waiting request ``req``. Fires only when (a) no instance can
+        admit ``req``, (b) its slack no longer covers its predicted
+        service time (calibrated contention model), and (c) a victim
+        exists whose slack exceeds the urgent slack by the hysteresis
+        margin, was not preempted too often already, is not mid-chunk
+        prefill, and whose eviction actually makes ``req`` admissible.
+        At most one preemption per model per cooldown window."""
+        last = self._last_preempt_step.get(model)
+        if last is not None and \
+                self.n_steps - last < self.preempt_cooldown_steps:
+            return False
+        t1, c = self.contention()
+        if t1 <= 0.0:
+            return False  # uncalibrated: no service-time prediction yet
+        need_ms = req.max_new_tokens * lm.predicted_iter_ms(
+            t1, c, max(1, self.busy_count()))
+        slack_ms = (req.deadline_s - now) * 1000.0
+        if slack_ms >= need_ms:
+            return False  # not urgent: waiting for an eviction is fine
+        best = None
+        for inst in self.running(model):
+            eng = inst.engine
+            for slot, erid, freeable in eng.preemption_candidates():
+                vreq = inst.requests.get(erid)
+                if vreq is None or vreq.n_preempted >= self.max_preemptions:
+                    continue
+                vslack_ms = (vreq.deadline_s - now) * 1000.0
+                if vslack_ms <= slack_ms + self.preempt_margin_ms:
+                    continue  # hysteresis: victim must be clearly lazier
+                if self.kv_layout == "paged" and \
+                        eng.allocator.n_available + freeable \
+                        < self._request_blocks(eng, req):
+                    continue  # eviction would not make req admissible
+                if best is None or vslack_ms > best[0]:
+                    best = (vslack_ms, inst, slot, erid)
+        if best is None:
+            return False
+        _, inst, slot, erid = best
+        snapshot = inst.engine.preempt(slot, requeue=False)
+        vreq = inst.requests.pop(erid)
+        vreq.resume = snapshot
+        vreq.n_preempted += 1
+        heapq.heappush(self.queues[model],
+                       (vreq.deadline_s, next(_seq), vreq))
+        self.n_preempted += 1
+        self.preempts_by_model[model] += 1
+        self._last_preempt_step[model] = self.n_steps
+        return True
 
     def _reject(self, req: PoolRequest) -> PoolResult:
         now = self.now()
@@ -441,15 +549,29 @@ class ModelInstancePool:
                         heapq.heappop(q)
                         rejected.append(self._reject(req))
                         continue
-                if not open_insts:
-                    break
+                def _open():
+                    return [i for i in self.running(model)
+                            if cap - i.n_resident > 0]
+
+                def _cands():
+                    return [i for i in open_insts
+                            if i.engine.admissible(
+                                len(req.prompt), req.max_new_tokens,
+                                pending.get(i.instance_id, 0),
+                                resume=req.resume)]
+
                 # paged engines additionally gate on free KV blocks —
                 # a slot is only admissible when the request's worst-case
                 # block need is reservable (docs/RUNTIME.md §7)
-                cands = [i for i in open_insts
-                         if i.engine.admissible(
-                             len(req.prompt), req.max_new_tokens,
-                             pending.get(i.instance_id, 0))]
+                cands = _cands() if open_insts else []
+                if not cands and self.preemption and \
+                        self._try_preempt(model, req, now):
+                    # the victim's slot (and blocks) freed synchronously;
+                    # its instance may now admit the urgent request
+                    open_insts = _open()
+                    cands = _cands()
+                if not open_insts and not cands:
+                    break
                 if not cands:
                     if self._never_admissible(model, req):
                         # no current or future grant could ever hold the
@@ -464,9 +586,13 @@ class ModelInstancePool:
                 if self.kv_layout == "paged":
                     pending[inst.instance_id] = \
                         pending.get(inst.instance_id, 0) \
-                        + inst.engine.request_blocks(len(req.prompt),
-                                                     req.max_new_tokens)
-                erid = inst.engine.submit(req.prompt, req.max_new_tokens)
+                        + self._request_blocks(inst.engine, req)
+                if req.resume is not None:
+                    erid = inst.engine.submit_resume(req.resume)
+                    req.resume = None
+                else:
+                    erid = inst.engine.submit(req.prompt,
+                                              req.max_new_tokens)
                 req.admit_s = now
                 inst.requests[erid] = req
                 self.admission_log.append((req.request_id,
@@ -513,17 +639,27 @@ class ModelInstancePool:
         # time of the WHOLE pool iteration (every busy instance steps once
         # before any sequence advances again) — that is the quantity the
         # contention model calibrates against the overlap level. Steps
-        # that prefill an admission are skipped: a prefill (or its first
-        # compile) costs orders of magnitude more than a decode iteration
-        # and would swamp the fit.
+        # that do prefill-chunk work are excluded from the CONTENTION fit
+        # (their cost scales with chunk tokens, not overlap) but feed the
+        # token-cost fit below, which prices exactly that.
         overlap = len(busy)
-        pure_decode = not any(i.engine.waiting for i in busy)
+        pure_decode = not any(i.engine.prefill_backlog_tokens
+                              for i in busy)
         t0 = time.perf_counter()
         for inst in busy:
             for r in inst.engine.step():
                 out.append(self._finish(inst, r.request_id, r.tokens))
         iter_ms = (time.perf_counter() - t0) * 1000.0
-        if pure_decode:
+        compiled = any(i.engine.last_step_compiled for i in busy)
+        if not compiled:
+            # (tokens processed, wall ms) — the fit behind the
+            # per-iteration token-budget knob (docs/RUNTIME.md §8);
+            # compile iterations would swamp the slope
+            self.token_samples.append(
+                (sum(i.engine.last_step_tokens for i in busy), iter_ms))
+            if len(self.token_samples) > 2 * _SAMPLE_WINDOW:
+                del self.token_samples[:-_SAMPLE_WINDOW]
+        if pure_decode and not compiled:
             self.contention_samples.append((overlap, iter_ms))
             self.occupancy_samples.append(
                 (sum(i.n_resident for i in busy),
@@ -544,17 +680,43 @@ class ModelInstancePool:
         self.n_steps += 1
         return out
 
+    def _work_pending(self) -> bool:
+        return any(self.queues.values()) \
+            or any(i.n_resident for i in self.live())
+
+    def _can_progress(self) -> bool:
+        """Stepping can still move work: something is resident on a live
+        instance, or a queued model has a RUNNING instance to route to.
+        Queued work with every instance retired is NOT progressable —
+        the caller must scale up first."""
+        if any(i.n_resident for i in self.live()):
+            return True
+        return any(q and self.running(m) for m, q in self.queues.items())
+
     def run_until_drained(self, max_steps: int = 10_000
                           ) -> List[PoolResult]:
         """Step until every queue and instance is empty (tests/benchmarks;
-        the serving loop calls ``step()`` directly)."""
+        the serving loop calls ``step()`` directly).
+
+        Raises ``RuntimeError`` when ``max_steps`` is exhausted with work
+        still pending — a silent partial return here made benchmarks read
+        partial completions as full drains. Queued work that CANNOT
+        progress (its model has no RUNNING instance) returns normally
+        instead of spinning: everything drainable was drained."""
         done: List[PoolResult] = []
-        while max_steps > 0 and (
-                any(self.queues.values())
-                or any(i.n_resident for i in self.live())):
+        while max_steps > 0 and self._work_pending():
+            if not self._can_progress():
+                break
             done.extend(self.step())
             max_steps -= 1
         self._sweep()
+        if self._work_pending() and self._can_progress():
+            queued = {m: len(q) for m, q in self.queues.items() if q}
+            resident = sum(i.n_resident for i in self.live())
+            raise RuntimeError(
+                f"run_until_drained: max_steps exhausted with work still "
+                f"pending (queued={queued}, resident={resident}) — raise "
+                f"max_steps or treat the workload as undrainable")
         return done
 
     def warmup(self, prompt_lens: Tuple[int, ...] = (8, 20),
@@ -587,7 +749,11 @@ class ModelInstancePool:
         self.admission_log = []
         self.contention_samples = []
         self.occupancy_samples = []
+        self.token_samples = []
         self.n_rejected = 0
+        self.n_preempted = 0
+        self.preempts_by_model = {m: 0 for m in self.configs}
+        self._last_preempt_step = {}
         self.n_steps = 0
         for lst in self.instances.values():
             for inst in lst:
@@ -600,6 +766,14 @@ class ModelInstancePool:
         if len(self.contention_samples) < 8:
             return 0.0, 0.0
         return lm.fit_contention(self.contention_samples[-_SAMPLE_WINDOW:])
+
+    def token_cost(self) -> Tuple[float, float]:
+        """Calibrated ``(base_ms, per_token_ms)`` iteration-cost model
+        (``latency_model.fit_token_cost``); ``(0, 0)`` before warmup.
+        Prices the per-iteration token budget for the scheduler guard."""
+        if len(self.token_samples) < 8:
+            return 0.0, 0.0
+        return lm.fit_token_cost(self.token_samples[-_SAMPLE_WINDOW:])
 
     # ---- KV occupancy (docs/RUNTIME.md §7) -------------------------------
     def kv_used_tokens(self, model: Optional[str] = None) -> int:
@@ -663,18 +837,24 @@ class ModelInstancePool:
                     [r.utility for r in served])) if served else 0.0,
                 "m_c": float(self.m_c(model)),
                 "queued": float(len(self.queues[model])),
+                "preempted": float(self.preempts_by_model.get(model, 0)),
             }
         return out
 
     def stats(self) -> Dict[str, float]:
         t1, c = self.contention()
+        base, per_tok = self.token_cost()
         out = {
             "n_steps": float(self.n_steps),
             "live_instances": float(self.total_live()),
             "retired_instances": float(len(self.retired)),
             "n_rejected": float(self.n_rejected),
+            "n_preempted": float(self.n_preempted),
+            "prefill_backlog_tokens": float(self.prefill_backlog_tokens()),
             "contention_t1_ms": t1,
             "contention_c": c,
+            "token_base_ms": base,
+            "token_per_ms": per_tok,
         }
         if self.kv_layout == "paged" or self.kv_block_budget:
             out.update({f"kv_{k}": v for k, v in self.kv_occupancy().items()})

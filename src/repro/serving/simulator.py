@@ -72,6 +72,8 @@ class CompletedRound:
     n_iters: int = 1         # decode iterations (1 = single-shot round)
     queue_waits_ms: Optional[List[float]] = None  # per request, >= 0
     request_utilities: Optional[List[float]] = None  # per-request Eq. 3
+    n_preempted: int = 0     # preemptions during this session
+    token_budget: int = 0    # per-iteration token cap (0 = uncapped)
 
     @property
     def throughput_rps(self) -> float:
@@ -89,6 +91,7 @@ class _Pending:
     deadline_ms: float
     state: np.ndarray
     action: int
+    token_budget: int = 0    # per-iteration token cap (0 = uncapped)
 
 
 @dataclasses.dataclass
@@ -114,10 +117,32 @@ class _Session:
     done: List[Request] = dataclasses.field(default_factory=list)
     n_iters: int = 0
     features: object = None
+    token_budget: int = 0    # per-iteration token cap (0 = uncapped)
+    n_preempted: int = 0
 
     @property
     def capacity(self) -> int:
         return self.b * self.m_c
+
+    def plan_tokens(self) -> Tuple[int, List[int]]:
+        """Work of the NEXT iteration under the token budget: decoding
+        requests take one token each; the leftover budget is handed to
+        prefilling requests in admission order (chunked prefill,
+        docs/ARCHITECTURE.md §5). Deterministic between scheduling the
+        ``iter`` event and handling it — joins/leaves only happen at
+        iteration boundaries — so the event's latency prices exactly the
+        work the handler then applies. Returns (total tokens,
+        per-request prefill allocation parallel to ``active``)."""
+        n_dec = sum(1 for r in self.active if r.prefill_remaining <= 0)
+        cap = self.token_budget if self.token_budget > 0 else (1 << 62)
+        left = max(0, cap - n_dec)
+        alloc: List[int] = []
+        for r in self.active:
+            take = min(left, r.prefill_remaining) \
+                if r.prefill_remaining > 0 else 0
+            alloc.append(take)
+            left -= take
+        return n_dec + sum(alloc), alloc
 
 
 class EdgeServingEnv:
@@ -147,7 +172,8 @@ class EdgeServingEnv:
         self.now = 0.0
         self.workload = PoissonWorkload(
             self.cfg.arrival_rps, self.models, seed=self.seed,
-            decode_steps_mean=self.cfg.decode_steps_mean)
+            decode_steps_mean=self.cfg.decode_steps_mean,
+            prefill_tokens_mean=self.cfg.prefill_tokens_mean)
         self.queues: Dict[str, RequestQueue] = {
             m: RequestQueue(m, self.cfg.max_queue) for m in self.models}
         self._events: List[tuple] = []
@@ -300,7 +326,8 @@ class EdgeServingEnv:
         # session drains, so the semi-MDP decision epoch always terminates.
         admit_window = p.b * prof.slo_ms * self.cfg.slo_scale
         sess = _Session(model, p.b, p.m_c, p.decision_ms, self.now,
-                        self.now + admit_window, mem, p.state, p.action)
+                        self.now + admit_window, mem, p.state, p.action,
+                        token_budget=p.token_budget)
         sess.features = interference_features(
             self.hw.mem_gb - other_mem, 0.3 + 0.05 * other_inst,
             self._accel_util(), p.m_c, p.b, prof.gflops, own_mem)
@@ -308,7 +335,9 @@ class EdgeServingEnv:
         self._push_event(self.now + self._iter_ms(sess), "iter", sess)
 
     def _session_join(self, sess: _Session) -> int:
-        """Admit queued requests into free slots (iteration boundary)."""
+        """Admit queued requests into free slots (iteration boundary).
+        A joining request first owes its prompt's prefill (chunked under
+        the session token budget); decode starts once it is paid."""
         if self.now > sess.admit_until_ms:
             return 0
         q = self.queues[sess.model]
@@ -316,28 +345,92 @@ class EdgeServingEnv:
         while len(sess.active) < sess.capacity and len(q):
             r = q.pop_batch(1)[0]
             r.start_ms = self.now
-            r.remaining = max(1, r.decode_steps)
+            if r.n_preempted == 0:
+                # fresh admission; a resumed request keeps the decode
+                # progress it already earned (remaining) and the
+                # recompute bill set at preemption time
+                # (prefill_remaining = prompt + emitted context)
+                r.remaining = max(1, r.decode_steps)
+                r.prefill_remaining = r.prefill_tokens
             sess.active.append(r)
             n += 1
         return n
 
     def _iter_ms(self, sess: _Session) -> float:
-        """Latency of ONE decode iteration at the current occupancy."""
+        """Latency of ONE iteration pricing the tokens it processes:
+        resident decodes plus budget-bounded prefill chunks (each prompt
+        token costs like one decode row, so the batch dimension is the
+        iteration's total token work)."""
         prof = EDGE_MODELS[sess.model]
-        b_eff = max(1, int(np.ceil(len(sess.active) / sess.m_c)))
+        tokens, _ = sess.plan_tokens()
+        b_eff = max(1, int(np.ceil(tokens / sess.m_c)))
         other_inst, other_mem = self._other_load(exclude=sess.model)
         est = lm.estimate_execution(self.hw, prof, b_eff, sess.m_c,
                                     other_inst, other_mem)
         return est.total_ms
 
+    def _maybe_preempt(self, sess: _Session) -> None:
+        """SLO-aware preemption (docs/RUNTIME.md §8), simulator twin of
+        the pool policy: when the session is full, the most urgent queued
+        request's slack no longer covers its predicted service time, and
+        a resident decoding request out-slacks it by the hysteresis
+        margin, evict that largest-slack resident back to the queue with
+        a recompute bill (prompt + emitted context re-prefilled on
+        resume). At most one eviction per iteration; per-request cap."""
+        if not self.cfg.preemption or len(sess.active) < sess.capacity:
+            return
+        slack_ms, urgent = self.queues[sess.model].peek_most_urgent(self.now)
+        if urgent is None:
+            return
+        iter_ms = self._iter_ms(sess)
+        need_ms = (urgent.decode_steps + urgent.prefill_tokens
+                   / max(1, sess.token_budget or urgent.prefill_tokens or 1)
+                   ) * iter_ms
+        if slack_ms >= need_ms:
+            return
+        margin = self.cfg.preempt_margin_ms
+        best = None
+        for r in sess.active:
+            if r.prefill_remaining > 0:   # never a mid-chunk prefill
+                continue
+            if r.n_preempted >= self.cfg.max_preemptions:
+                continue
+            if r.slo_ms <= urgent.slo_ms:
+                # the queue pops shortest-SLO first: a victim whose SLO
+                # class is not strictly laxer would re-admit ahead of the
+                # urgent request at this very boundary (thrash)
+                continue
+            vslack = r.deadline_ms - self.now
+            if vslack <= slack_ms + margin:
+                continue
+            if best is None or vslack > best[0]:
+                best = (vslack, r)
+        if best is None:
+            return
+        victim = best[1]
+        sess.active.remove(victim)
+        victim.n_preempted += 1
+        emitted = victim.decode_steps - victim.remaining
+        victim.prefill_remaining = victim.prefill_tokens + emitted
+        sess.n_preempted += 1
+        if not self.queues[sess.model].push(victim):
+            # queue full: the evicted request is dropped (counted there)
+            pass
+
     def _handle_iter(self, sess: _Session) -> None:
-        """One decode iteration just finished: leaves, then joins, then
-        either the next iteration or session completion."""
+        """One iteration just finished: apply its planned prefill/decode
+        work, then leaves, preemption check, joins, then either the next
+        iteration or session completion."""
+        _, alloc = sess.plan_tokens()
         sess.n_iters += 1
         prof = EDGE_MODELS[sess.model]
         t_t = lm.transmission_ms(self.hw, prof)
         still = []
-        for r in sess.active:
+        for r, take in zip(sess.active, alloc):
+            if r.prefill_remaining > 0:
+                r.prefill_remaining -= take
+                still.append(r)
+                continue
             r.remaining -= 1
             if r.remaining <= 0:
                 r.finish_ms = self.now + t_t + lm.serialization_ms(1)
@@ -345,6 +438,7 @@ class EdgeServingEnv:
             else:
                 still.append(r)
         sess.active = still
+        self._maybe_preempt(sess)
         self._session_join(sess)
         if sess.active:
             self._push_event(self.now + self._iter_ms(sess), "iter", sess)
@@ -375,7 +469,9 @@ class EdgeServingEnv:
                              lats, violations, False, u, sess.mem_gb,
                              sess.features, exec_mode="continuous",
                              n_iters=sess.n_iters, queue_waits_ms=waits,
-                             request_utilities=utils)
+                             request_utilities=utils,
+                             n_preempted=sess.n_preempted,
+                             token_budget=sess.token_budget)
         self._handle_complete(rnd)
 
     # ------------------------------------------------------------ decisions
@@ -447,11 +543,11 @@ class EdgeServingEnv:
     def step(self, action: int) -> Tuple[np.ndarray, float, bool, Dict]:
         model = self._focus
         state = self._observe(model)
-        b, m_c = self.cfg.action_to_pair(action)
+        b, m_c, token_budget = self.cfg.action_to_triple(action)
         target = b  # formation waits for one instance-batch
         budget = self.slot_budget_ms(model, b, m_c)
         p = _Pending(model, b, m_c, target, self.now, self.now + budget,
-                     state, action)
+                     state, action, token_budget=token_budget)
         self.status[model] = PENDING
         self.pending[model] = p
         self._last_sa[model] = (state, action)

@@ -16,14 +16,18 @@ class PoissonWorkload:
 
     def __init__(self, rps: float = 30.0, models: Optional[Sequence[str]] = None,
                  mix: Optional[Dict[str, float]] = None, seed: int = 0,
-                 decode_steps_mean: float = 1.0):
+                 decode_steps_mean: float = 1.0,
+                 prefill_tokens_mean: float = 0.0):
         """``rps`` is the PER-MODEL arrival rate (paper §V-A: 30 rps per
         served model); the aggregate rate is rps * len(models).
 
         ``decode_steps_mean`` > 1 makes the workload autoregressive: each
         request draws a geometric number of decode iterations with that
         mean, so sequences finish at different lengths — the regime
-        continuous batching (docs/ARCHITECTURE.md §5) exploits."""
+        continuous batching (docs/ARCHITECTURE.md §5) exploits.
+        ``prefill_tokens_mean`` > 0 additionally gives each request a
+        geometric prompt length that must be prefilled before decoding
+        (the chunked-prefill regime)."""
         self.models = list(models or EDGE_MODELS.keys())
         self.rps = rps * len(self.models)
         if mix is None:
@@ -32,12 +36,18 @@ class PoissonWorkload:
         self.probs = np.array([mix[m] / total for m in self.models])
         self.rng = np.random.default_rng(seed)
         self.decode_steps_mean = max(1.0, decode_steps_mean)
+        self.prefill_tokens_mean = max(0.0, prefill_tokens_mean)
         self.now_ms = 0.0
 
     def _draw_decode_steps(self) -> int:
         if self.decode_steps_mean <= 1.0:
             return 1
         return int(self.rng.geometric(1.0 / self.decode_steps_mean))
+
+    def _draw_prefill_tokens(self) -> int:
+        if self.prefill_tokens_mean <= 0.0:
+            return 0
+        return int(self.rng.geometric(1.0 / self.prefill_tokens_mean))
 
     def next_request(self) -> Request:
         gap_ms = self.rng.exponential(1000.0 / self.rps)
@@ -47,7 +57,8 @@ class PoissonWorkload:
         return Request(model=name, input_type=prof.task,
                        input_shape=prof.input_shape, slo_ms=prof.slo_ms,
                        arrival_ms=self.now_ms,
-                       decode_steps=self._draw_decode_steps())
+                       decode_steps=self._draw_decode_steps(),
+                       prefill_tokens=self._draw_prefill_tokens())
 
     def until(self, t_ms: float) -> Iterator[Request]:
         while True:
