@@ -30,6 +30,7 @@ MODULES = [
     "fig_multimodel_concurrency",
     "fig_paged_kv",
     "fig_preemption_chunked",
+    "fig_prefix_cache",
     "roofline_table",
 ]
 

@@ -180,6 +180,15 @@ class ServingConfig:
     arrivals (docs/ARCHITECTURE.md §5). ``preemption`` enables the
     SLO-aware eviction policy (trigger/victim/hysteresis in
     docs/RUNTIME.md §8) in the continuous simulator.
+
+    ``shared_prefix_tokens`` > 0 makes the workload a *templated* one
+    (docs/ARCHITECTURE.md §5): each request's prompt starts with one of
+    ``prefix_population`` shared prefixes of that length (system prompts
+    / per-model task preambles), on top of its geometric unique tail.
+    With ``prefix_cache`` on, the simulator's sessions skip the prefill
+    of a prefix an earlier request of the same model already paid — the
+    analytic twin of the engine's block-sharing prefix cache, so learned
+    policies see cache dynamics.
     """
 
     batch_sizes: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128)
@@ -199,6 +208,12 @@ class ServingConfig:
     preemption: bool = False  # SLO-aware eviction (continuous mode)
     preempt_margin_ms: float = 50.0  # victim must out-slack urgent by this
     max_preemptions: int = 2  # per-request cap (anti-thrash)
+    #: shared-prefix (templated) workload: prefix length in tokens
+    #: (0 = no shared prefixes) drawn from a population of distinct
+    #: prefixes; prefix_cache lets sessions skip already-paid prefixes
+    shared_prefix_tokens: float = 0.0
+    prefix_population: int = 4
+    prefix_cache: bool = False
 
     def __post_init__(self):
         assert self.exec_mode in ("round", "continuous"), self.exec_mode
@@ -206,6 +221,8 @@ class ServingConfig:
         assert self.token_budgets, "need at least one token-budget level"
         assert all(t >= 0 for t in self.token_budgets), self.token_budgets
         assert self.prefill_tokens_mean >= 0.0, self.prefill_tokens_mean
+        assert self.shared_prefix_tokens >= 0.0, self.shared_prefix_tokens
+        assert self.prefix_population >= 1, self.prefix_population
 
     @property
     def n_actions(self) -> int:

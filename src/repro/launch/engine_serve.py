@@ -37,8 +37,24 @@ from repro.core.interference import NNInterferencePredictor
 from repro.core.sac import SACAgent, SACConfig
 from repro.core.utility import utility
 from repro.serving.bcedge import PoolScheduler
-from repro.serving.engine import ContinuousBatchingEngine, InferenceEngine
+from repro.serving.engine import (SEQ_BUCKETS, ContinuousBatchingEngine,
+                                  InferenceEngine, _bucket)
 from repro.serving.runtime import ModelInstancePool
+
+#: unique-tail length _shared_prefix_prompts appends to every prefix
+#: (fixed: left-padding makes prefix sharing length-sensitive)
+_PREFIX_TAIL = 8
+
+
+def _serve_max_seq(shared_prefix_tokens: int, default: int = 128) -> int:
+    """Cache length sized to the generated workload: a templated prompt
+    (prefix + fixed tail) must fit its bucket AND leave decode room —
+    with the historical default for untemplated traffic."""
+    if not shared_prefix_tokens:
+        return default
+    bucket = _bucket(shared_prefix_tokens + _PREFIX_TAIL,
+                     buckets=SEQ_BUCKETS)
+    return max(default, bucket + 64)
 
 
 def _report(served: int, violations: int, rounds: int, lat_sum: float,
@@ -107,27 +123,55 @@ def serve_round(arch: str = "qwen3-0.6b", duration_s: float = 20.0,
             time.perf_counter() - t0, slo_ms, "round")
 
 
+def _shared_prefix_prompts(rng, vocab: int, shared_prefix_tokens: int,
+                           population: int = 4):
+    """Prompt factory for templated workloads: draws one of
+    ``population`` fixed shared prefixes plus a random unique tail of a
+    FIXED length (left-padding makes sharing length-sensitive — see
+    docs/ARCHITECTURE.md §5)."""
+    prefixes = [rng.integers(1, vocab, shared_prefix_tokens).astype(
+        np.int32) for _ in range(population)]
+
+    def draw():
+        tail = rng.integers(1, vocab, _PREFIX_TAIL).astype(np.int32)
+        return np.concatenate(
+            [prefixes[int(rng.integers(population))], tail])
+    return draw
+
+
 def serve_continuous(arch: str = "qwen3-0.6b", duration_s: float = 20.0,
                      rps: float = 12.0, slo_ms: float = 1500.0,
                      max_slots: int = 4, kv_layout: str = "dense",
                      kv_block_budget: Optional[int] = None,
-                     token_budget: Optional[int] = None) -> None:
+                     token_budget: Optional[int] = None,
+                     prefix_cache: bool = False,
+                     shared_prefix_tokens: int = 0) -> None:
     """Continuous mode: arrivals are submitted into the slot engine as
     they land and join the running batch at iteration boundaries. With
     ``kv_layout="paged"``, ``kv_block_budget`` caps the engine's block
     pool (default: the dense-equivalent worst case). ``token_budget``
     caps per-iteration prefill+decode tokens (chunked prefill,
-    docs/ARCHITECTURE.md §5)."""
+    docs/ARCHITECTURE.md §5). ``prefix_cache`` shares full immutable
+    prompt blocks across same-prefix sequences (paged only);
+    ``shared_prefix_tokens`` makes the generated workload templated so
+    the cache has something to hit."""
     cfg = get_reduced_config(arch)
     print(f"loading reduced {cfg.name} "
           f"(d={cfg.d_model}, L={cfg.n_layers}), "
           f"{max_slots} slots, {kv_layout} KV, "
-          f"token budget {token_budget or 'uncapped'}...")
-    engine = ContinuousBatchingEngine(cfg, max_slots=max_slots, max_seq=128,
+          f"token budget {token_budget or 'uncapped'}, "
+          f"prefix cache {'on' if prefix_cache else 'off'}...")
+    engine = ContinuousBatchingEngine(cfg, max_slots=max_slots,
+                                      max_seq=_serve_max_seq(
+                                          shared_prefix_tokens),
                                       kv_layout=kv_layout,
                                       kv_blocks=kv_block_budget,
-                                      token_budget=token_budget)
+                                      token_budget=token_budget,
+                                      prefix_cache=prefix_cache)
     rng = np.random.default_rng(0)
+    draw_prompt = _shared_prefix_prompts(
+        rng, cfg.vocab_size, shared_prefix_tokens) \
+        if shared_prefix_tokens else None
 
     t0 = time.perf_counter()
     next_arrival = rng.exponential(1.0 / rps)
@@ -137,8 +181,9 @@ def serve_continuous(arch: str = "qwen3-0.6b", duration_s: float = 20.0,
     while time.perf_counter() - t0 < duration_s:
         now = time.perf_counter() - t0
         while next_arrival <= now:
-            prompt = rng.integers(1, cfg.vocab_size,
-                                  rng.integers(4, 24)).astype(np.int32)
+            prompt = draw_prompt() if draw_prompt is not None else \
+                rng.integers(1, cfg.vocab_size,
+                             rng.integers(4, 24)).astype(np.int32)
             rid = engine.submit(prompt, max_new_tokens=4)
             submit_t[rid] = next_arrival
             next_arrival += rng.exponential(1.0 / rps)
@@ -164,7 +209,9 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
                kv_layout: str = "dense",
                kv_block_budget: Optional[int] = None,
                token_budget: Optional[int] = None,
-               preemption: bool = False
+               preemption: bool = False,
+               prefix_cache: bool = False,
+               shared_prefix_tokens: int = 0
                ) -> Dict[str, Dict[str, float]]:
     """Multi-model pool serve (docs/RUNTIME.md): Poisson arrivals per
     model are routed by deadline into a ``ModelInstancePool`` of live
@@ -174,18 +221,25 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
     layout under a shared ``kv_block_budget`` (docs/RUNTIME.md §7).
     ``token_budget`` adds the per-iteration token cap as a third
     scheduler axis and ``preemption`` enables SLO-aware eviction
-    (docs/RUNTIME.md §8). Returns the pool's per-model report."""
+    (docs/RUNTIME.md §8). ``prefix_cache`` shares full immutable prompt
+    blocks across same-prefix sequences on pageable models, with router
+    prefix affinity (docs/RUNTIME.md §7); pair it with
+    ``shared_prefix_tokens`` so the generated workload is templated.
+    Returns the pool's per-model report."""
     cfgs = {m: get_reduced_config(m) for m in models}
     for m, cfg in cfgs.items():
         print(f"loading reduced {cfg.name} "
               f"(d={cfg.d_model}, L={cfg.n_layers})...")
     pool = ModelInstancePool(cfgs, max_instances=max_instances,
-                             max_slots=max_slots, max_seq=128, seed=seed,
+                             max_slots=max_slots,
+                             max_seq=_serve_max_seq(shared_prefix_tokens),
+                             seed=seed,
                              strict_admission=True,
                              predictor=NNInterferencePredictor(seed=seed),
                              kv_layout=kv_layout,
                              kv_block_budget=kv_block_budget,
-                             preemption=preemption)
+                             preemption=preemption,
+                             prefix_cache=prefix_cache)
     per_model_mc = max(1, max_instances // max(1, len(cfgs)))
     scfg = ServingConfig(
         batch_sizes=tuple(b for b in (1, 2, 4, 8) if b <= max_slots),
@@ -205,6 +259,10 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
     pool.warmup(seed=seed)
 
     rng = np.random.default_rng(seed)
+    draw_prompt = {m: _shared_prefix_prompts(rng, cfg.vocab_size,
+                                             shared_prefix_tokens)
+                   for m, cfg in cfgs.items()} if shared_prefix_tokens \
+        else None
     per_rps = rps / max(1, len(cfgs))
     next_arrival = {m: rng.exponential(1.0 / per_rps) for m in cfgs}
     next_control = control_ms / 1000.0
@@ -213,7 +271,8 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
         now = time.perf_counter() - t0
         for m, cfg in cfgs.items():
             while next_arrival[m] <= now:
-                prompt = rng.integers(1, cfg.vocab_size,
+                prompt = draw_prompt[m]() if draw_prompt is not None \
+                    else rng.integers(1, cfg.vocab_size,
                                       rng.integers(4, 24)).astype(np.int32)
                 pool.submit(m, prompt, slo_ms=slo_ms,
                             max_new_tokens=max_new_tokens)
@@ -251,7 +310,8 @@ def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
          max_instances: int = 4, kv_layout: str = "dense",
          kv_block_budget: Optional[int] = None,
          token_budget: Optional[int] = None,
-         preemption: bool = False) -> None:
+         preemption: bool = False, prefix_cache: bool = False,
+         shared_prefix_tokens: float = 0.0) -> None:
     if models:
         if exec_mode != "continuous":
             print("multi-model pool serving is continuous-only; "
@@ -259,19 +319,23 @@ def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
         serve_pool(models, duration_s, rps, slo_ms,
                    max_instances=max_instances, kv_layout=kv_layout,
                    kv_block_budget=kv_block_budget,
-                   token_budget=token_budget, preemption=preemption)
+                   token_budget=token_budget, preemption=preemption,
+                   prefix_cache=prefix_cache,
+                   shared_prefix_tokens=int(shared_prefix_tokens))
     elif exec_mode == "continuous":
         serve_continuous(arch, duration_s, rps, slo_ms,
                          kv_layout=kv_layout,
                          kv_block_budget=kv_block_budget,
-                         token_budget=token_budget)
+                         token_budget=token_budget,
+                         prefix_cache=prefix_cache,
+                         shared_prefix_tokens=int(shared_prefix_tokens))
     else:
         if kv_layout != "dense":
             print("round mode always uses the dense per-round cache; "
                   "--kv-layout applies to continuous/pool serving")
-        if token_budget or preemption:
-            print("chunked prefill / preemption are continuous-engine "
-                  "features; ignored in round mode")
+        if token_budget or preemption or prefix_cache:
+            print("chunked prefill / preemption / prefix caching are "
+                  "continuous-engine features; ignored in round mode")
         serve_round(arch, duration_s, rps, slo_ms)
 
 

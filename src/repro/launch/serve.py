@@ -66,11 +66,26 @@ def main() -> None:
                     help="simulator: mean prompt tokens per request "
                          "(geometric; 0 = single-shot, no prefill "
                          "modeling)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="vLLM-style prefix caching: paged engines "
+                         "share full immutable prompt blocks at "
+                         "refcount+1 (copy-on-write tails, LRU reuse of "
+                         "evicted blocks; docs/ARCHITECTURE.md §5); the "
+                         "simulator skips already-paid shared prefixes. "
+                         "Engine/pool modes require --kv-layout paged")
+    ap.add_argument("--shared-prefix-tokens", type=float, default=0.0,
+                    help="templated workload: every prompt starts with "
+                         "one of a small population of shared prefixes "
+                         "of this many tokens (the regime "
+                         "--prefix-cache exploits). Default: 0 (off)")
     args = ap.parse_args()
 
     if args.models and not args.engine:
         ap.error("--models requires --engine (the simulator is already "
                  "multi-tenant over the paper's Table-IV models)")
+    if args.prefix_cache and args.engine and args.kv_layout != "paged":
+        ap.error("--prefix-cache on the engine needs --kv-layout paged "
+                 "(sharing is block-granular)")
 
     if args.engine:
         from repro.launch import engine_serve
@@ -81,7 +96,9 @@ def main() -> None:
                           kv_layout=args.kv_layout,
                           kv_block_budget=args.kv_block_budget,
                           token_budget=args.token_budget,
-                          preemption=args.preemption)
+                          preemption=args.preemption,
+                          prefix_cache=args.prefix_cache,
+                          shared_prefix_tokens=args.shared_prefix_tokens)
         return
 
     from repro.config.base import ServingConfig
@@ -99,7 +116,10 @@ def main() -> None:
                         prefill_tokens_mean=max(0.0, args.prefill_tokens),
                         token_budgets=(0,) if not args.token_budget
                         else (0, args.token_budget),
-                        preemption=args.preemption)
+                        preemption=args.preemption,
+                        shared_prefix_tokens=max(
+                            0.0, args.shared_prefix_tokens),
+                        prefix_cache=args.prefix_cache)
     env0 = EdgeServingEnv(cfg, episode_ms=1.0)
     agent = SACAgent(state_dim(env0.models), cfg.n_actions,
                      SACConfig(batch_size=256, lr=5e-4))

@@ -562,6 +562,18 @@ def gather_blocks(pool: jax.Array, block_ids: jax.Array) -> jax.Array:
     return pool[block_ids].reshape((n * bs,) + pool.shape[2:])
 
 
+def gather_blocks_stacked(pool: jax.Array, block_ids: jax.Array
+                          ) -> jax.Array:
+    """:func:`gather_blocks` for scan-stacked unit caches: pool
+    (U, N, bs, ...) + ids (n,) -> (U, n*bs, ...) logical rows in
+    block-table order — the read-side primitive prefix-cache staging
+    fills are built from."""
+    bs = pool.shape[2]
+    n = block_ids.shape[0]
+    g = pool[:, block_ids]
+    return g.reshape((pool.shape[0], n * bs) + pool.shape[3:])
+
+
 def _rows_to_blocks(rows: jax.Array, n: int, bs: int) -> jax.Array:
     """Fold a token axis (third-from-last, length T <= n*bs) into
     (n, bs) blocks, zero-padding the ragged tail of the last block."""

@@ -188,8 +188,9 @@ def run_episode(env: EdgeServingEnv, agent,
 #: [log1p(queue), oldest slack s, own m_c share, total live share,
 #:  log1p(predicted iter ms), log1p(Eq.-1 slot ms),
 #:  KV budget headroom frac (1.0 for dense/unlimited pools),
-#:  log1p(prefill backlog tokens), log1p(preemptions since last decision)]
-POOL_STATE_DIM = 9
+#:  log1p(prefill backlog tokens), log1p(preemptions since last decision),
+#:  prefix-cache hit rate (0.0 for dense / cache-off pools)]
+POOL_STATE_DIM = 10
 
 
 class PoolScheduler:
@@ -273,6 +274,7 @@ class PoolScheduler:
             headroom,
             np.log1p(max(0, p.prefill_backlog_tokens(model))),
             np.log1p(max(0, new_preempts)),
+            float(occ.get("prefix_hit_rate", 0.0)),
         ], np.float32)
 
     def _kv_feasible(self, model: str, b: int, m_c: int) -> bool:
@@ -287,7 +289,13 @@ class PoolScheduler:
         This is the *demand* side of Eq. 4; the *allocation* side
         (committed spawn grants) is enforced physically by
         ``pool.scale_to``/``can_spawn`` clamping on free blocks, and is
-        surfaced to the agent via the headroom state feature."""
+        surfaced to the agent via the headroom state feature.
+
+        With prefix caching on, the demand is priced in *effective*
+        blocks: the measured shared fraction discounts the per-sequence
+        footprint (a block mapped by k sequences charges the budget
+        once), so the scheduler can exploit sharing when it sizes
+        (b, m_c) instead of leaving the freed capacity idle."""
         occ = self.pool.kv_occupancy()
         budget = occ["budget_tokens"]
         tps = occ["tokens_per_seq"]
@@ -295,6 +303,8 @@ class PoolScheduler:
             return True
         used_others = occ["used_tokens"] - self.pool.kv_used_tokens(model)
         need = lm.predicted_kv_tokens(tps, b * m_c)
+        shared = min(max(occ.get("shared_frac", 0.0), 0.0), 0.95)
+        need *= 1.0 - shared
         return need + used_others <= budget
 
     def _iter_budget_ms(self, model: str) -> float:

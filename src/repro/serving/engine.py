@@ -22,7 +22,10 @@ the full configs under the production mesh.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional, Set, Tuple
 
 import jax
@@ -31,7 +34,8 @@ import numpy as np
 
 from repro.config.base import ModelConfig
 from repro.models import build_model
-from repro.models.transformer import (_split_layers, pad_cache,
+from repro.models.transformer import (_split_layers, gather_blocks,
+                                      gather_blocks_stacked, pad_cache,
                                       paged_layer_kind, scatter_blocks,
                                       scatter_blocks_stacked)
 
@@ -47,7 +51,20 @@ def _bucket(n: int, buckets=(1, 2, 4, 8, 16, 32, 64, 128)) -> int:
         f"size {n} exceeds the largest bucket {buckets[-1]}")
 
 
-SEQ_BUCKETS = (16, 32, 64, 128, 256, 512)
+SEQ_BUCKETS = (16, 32, 64, 128, 256, 512, 640)
+
+
+def supports_prefix_cache(cfg: ModelConfig) -> bool:
+    """Prefix caching shares physical KV *blocks*, so it needs every
+    layer's decode state to live in the block pool: linear-attention KV
+    only (``paged_layer_kind``). Recurrent states and windowed ring
+    buffers are per-slot dense — a shared-prefix hit would also need the
+    recurrent state at the block boundary, which the cache does not
+    hold — and frontend/enc-dec models bypass the chunked path
+    entirely."""
+    if cfg.frontend is not None or cfg.enc_dec:
+        return False
+    return all(paged_layer_kind(cfg, k) for k in cfg.layer_kinds())
 
 #: largest chunked-prefill piece; pieces are powers of two up to this, so
 #: the chunk compile cache is bounded at one shape per piece size
@@ -150,24 +167,40 @@ class InferenceEngine:
 # continuous (iteration-level) batching
 # =====================================================================
 class BlockAllocator:
-    """Free-list allocator over a paged KV block pool
+    """Reference-counted free-list allocator over a paged KV block pool,
+    with a hash-keyed cache of full immutable prefix blocks
     (docs/ARCHITECTURE.md §5).
 
     ``n_blocks`` usable blocks of ``block_size`` tokens; physical ids are
     1..n_blocks (id 0 is the null block inactive batch rows write into,
     never handed out). Admission *reserves* a sequence's worst-case block
     count up front, so the lazy per-decode-boundary ``alloc_reserved``
-    can never fail mid-sequence; eviction returns blocks to the free
-    list and cancels the unfilled remainder of the reservation.
+    can never fail mid-sequence; eviction decrements refcounts and
+    cancels the unfilled remainder of the reservation.
 
-    Invariants (asserted in tests/test_paged_kv.py):
-      * ``n_free - n_reserved == n_available >= 0`` at all times;
-      * every id is either free or owned by exactly one slot;
-      * the null block 0 is never allocated.
+    Prefix caching (docs/ARCHITECTURE.md §5): the engine ``register``s a
+    full, immutable prompt block under its token-chain hash key;
+    ``acquire`` maps that physical block into another sequence at
+    refcount+1, so N same-prefix residents hold the prefix ONCE. A block
+    whose refcount drops to zero returns to the free list when it is
+    unregistered, or parks in an LRU pool when it is cached —
+    evicted-but-cached blocks are reclaimed (oldest first, cache entry
+    invalidated) when an allocation finds the free list empty.
+
+    Invariants (asserted in tests/test_paged_kv.py and fuzzed in
+    tests/test_engine_fuzz.py):
+      * ``n_free + n_cached + n_live == n_blocks`` (the three id sets
+        are disjoint — conservation);
+      * ``n_free + n_cached - n_reserved == n_available >= 0``;
+      * a block mapped by k sequences has refcount k (no block is owned
+        by two slots without a refcount);
+      * the null block 0 is never allocated;
+      * LRU reclaim only ever takes refcount-0 blocks.
 
     ``free`` verifies ownership against the outstanding-id set and raises
-    on a double free (or a duplicate id within one call) — a silently
-    re-freed id would hand the same physical block to two sequences.
+    on a double free (more ``free``s than the refcount ever granted) or
+    a duplicate id within one call — a silently re-freed id would hand
+    the same physical block to two sequences.
     """
 
     def __init__(self, n_blocks: int, block_size: int):
@@ -177,19 +210,42 @@ class BlockAllocator:
         self.block_size = block_size
         self._free = list(range(n_blocks, 0, -1))  # pop() -> low ids first
         self._outstanding: Set[int] = set()
+        self._refcount: Dict[int, int] = {}
+        #: prefix cache: chain-hash key -> block id, plus the reverse map
+        #: and the LRU pool of refcount-0 cached (reclaimable) blocks
+        self._cache: Dict[str, int] = {}
+        self._block_key: Dict[int, str] = {}
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
         self.n_reserved = 0
+        self.n_reclaimed = 0    # cached blocks evicted under pressure
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
     @property
+    def n_cached(self) -> int:
+        """Refcount-0 blocks parked in the prefix-cache LRU pool —
+        reclaimable, so they count toward ``n_available``."""
+        return len(self._lru)
+
+    @property
+    def n_live(self) -> int:
+        """Distinct physical blocks with refcount >= 1 (shared blocks
+        count ONCE — the quantity budget accounting charges)."""
+        return len(self._outstanding)
+
+    @property
     def n_available(self) -> int:
-        """Blocks neither allocated nor promised to an admitted slot."""
-        return len(self._free) - self.n_reserved
+        """Blocks neither live nor promised to an admitted slot
+        (evicted-but-cached LRU blocks are reclaimable, so they count)."""
+        return len(self._free) + len(self._lru) - self.n_reserved
 
     def blocks_for(self, n_tokens: int) -> int:
         return -(-max(0, n_tokens) // self.block_size)
+
+    def refcount(self, bid: int) -> int:
+        return self._refcount.get(bid, 0)
 
     def reserve(self, n: int) -> bool:
         """Promise ``n`` blocks to a sequence; False when they are not
@@ -203,20 +259,35 @@ class BlockAllocator:
         assert 0 <= n <= self.n_reserved
         self.n_reserved -= n
 
+    def _reclaim_lru(self) -> int:
+        """Evict the least-recently-parked cached block: its cache entry
+        is invalidated and the id behaves like a fresh free block."""
+        bid, _ = self._lru.popitem(last=False)
+        key = self._block_key.pop(bid)
+        del self._cache[key]
+        self.n_reclaimed += 1
+        return bid
+
     def alloc_reserved(self) -> int:
-        """Convert one previously reserved block into a physical id."""
+        """Convert one previously reserved block into a physical id,
+        reclaiming from the cached-LRU pool when the free list is empty
+        (never a block with live references — the LRU holds refcount-0
+        blocks only)."""
         assert self.n_reserved > 0, "alloc without reservation"
         self.n_reserved -= 1
-        bid = self._free.pop()
+        bid = self._free.pop() if self._free else self._reclaim_lru()
         self._outstanding.add(bid)
+        self._refcount[bid] = 1
         return bid
 
     def free(self, ids: List[int]) -> None:
-        """Return ``ids`` to the free list. Raises ``ValueError`` on an
-        out-of-range id, a duplicate within ``ids``, or a double free
-        (an id that is not currently allocated) — any of which would
-        corrupt the free list and alias one physical block to two
-        sequences."""
+        """Drop one reference per id. A block reaching refcount 0 returns
+        to the free list — or parks in the cached-LRU pool when it is
+        registered in the prefix cache, so a future same-prefix admission
+        can revive it. Raises ``ValueError`` on an out-of-range id, a
+        duplicate within ``ids``, or a double free (an id with no live
+        references left) — any of which would corrupt the free list and
+        alias one physical block to two sequences."""
         if len(set(ids)) != len(ids):
             raise ValueError(f"duplicate block ids in free(): {ids}")
         for i in ids:
@@ -226,8 +297,57 @@ class BlockAllocator:
             if i not in self._outstanding:
                 raise ValueError(
                     f"double free of block {i}: not currently allocated")
-        self._outstanding.difference_update(ids)
-        self._free.extend(ids)
+        for i in ids:
+            self._refcount[i] -= 1
+            if self._refcount[i] > 0:
+                continue  # still referenced by another sequence
+            del self._refcount[i]
+            self._outstanding.discard(i)
+            if i in self._block_key:
+                self._lru[i] = None  # evicted but cached (reclaimable)
+            else:
+                self._free.append(i)
+
+    # ---- prefix cache (docs/ARCHITECTURE.md §5) --------------------------
+    def cached(self, key: str) -> bool:
+        return key in self._cache
+
+    def cached_live(self, key: str) -> bool:
+        """True when ``key``'s block is currently mapped by a live
+        sequence — sharing it costs no extra capacity."""
+        bid = self._cache.get(key)
+        return bid is not None and bid in self._outstanding
+
+    def register(self, key: str, bid: int) -> None:
+        """Publish a full immutable block under its chain-hash key. The
+        block must be live (its writer still owns it); first writer wins
+        on a key collision, and a block only ever carries one key (its
+        content determines the whole chain)."""
+        assert bid in self._outstanding, f"register of non-live block {bid}"
+        if key in self._cache or bid in self._block_key:
+            return
+        self._cache[key] = bid
+        self._block_key[bid] = key
+
+    def acquire(self, key: str) -> Optional[int]:
+        """Map the cached block for ``key`` into another sequence:
+        refcount+1 for a live block (costs nothing), revival for an
+        LRU-parked one (consumes one available block — refused when
+        every remaining block is already promised to a reservation).
+        Returns the block id, or None on a miss."""
+        bid = self._cache.get(key)
+        if bid is None:
+            return None
+        if bid in self._outstanding:
+            self._refcount[bid] += 1
+            return bid
+        # revive from the LRU pool; guard the reservation promise
+        if self.n_available < 1:
+            return None
+        del self._lru[bid]
+        self._outstanding.add(bid)
+        self._refcount[bid] = 1
+        return bid
 
 
 @dataclasses.dataclass
@@ -247,6 +367,9 @@ class _Slot:
     # admission reservation remain unallocated (alloc-on-decode-boundary)
     blocks: List[int] = dataclasses.field(default_factory=list)
     n_outstanding: int = 0
+    #: leading blocks of ``blocks`` mapped from the prefix cache at
+    #: refcount+1 — immutable; graft/decode writes start past them
+    n_shared: int = 0
     # chunked prefill state machine
     seq_tokens: Optional[np.ndarray] = None  # padded prompt (+ resume ctx)
     base_len: int = 0           # padded-prompt length at FIRST admission
@@ -351,7 +474,8 @@ class ContinuousBatchingEngine:
                  share_from: "ContinuousBatchingEngine" = None,
                  kv_layout: str = "dense", block_size: int = 16,
                  kv_blocks: int = None,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 prefix_cache: bool = False):
         if cfg.enc_dec:
             # cross-attention K/V is unmasked (_cross_core attends every
             # encoder row), so grafting a shorter prefilled ck/cv into the
@@ -377,6 +501,23 @@ class ContinuousBatchingEngine:
         #: keep the single-shot prefill admission path (and therefore
         #: do not support preemption-resume)
         self.chunked = cfg.frontend is None and not cfg.enc_dec
+        if prefix_cache:
+            if kv_layout != "paged":
+                raise ValueError(
+                    "prefix_cache needs kv_layout='paged' (sharing is "
+                    "block-granular)")
+            if not supports_prefix_cache(cfg):
+                raise ValueError(
+                    f"{cfg.name}: prefix_cache needs every layer's decode "
+                    "state in the block pool (linear attention only); "
+                    "recurrent/windowed/frontend layers keep per-slot "
+                    "dense state the cache cannot share")
+        self.prefix_cache = prefix_cache
+        #: prefix-cache accounting (tokens; rate = hit / (hit + chunked))
+        self.n_prefix_lookups = 0
+        self.n_prefix_hits = 0
+        self.n_prefix_hit_tokens = 0
+        self.n_prefill_chunk_tokens = 0
         if share_from is not None and share_from.cfg == cfg:
             # co-resident instances of the same model share weights and
             # jit caches (docs/RUNTIME.md: spawn must be cheap for the
@@ -494,7 +635,8 @@ class ContinuousBatchingEngine:
 
     def admissible(self, prompt_len: int, max_new: int,
                    pending_blocks: int = 0,
-                   resume: Optional[PreemptedRequest] = None) -> bool:
+                   resume: Optional[PreemptedRequest] = None,
+                   prompt: Optional[np.ndarray] = None) -> bool:
         """Could a request of this shape be admitted right now? Dense:
         a free slot. Paged: a free slot AND enough unreserved blocks
         (the real memory constraint, docs/ARCHITECTURE.md §5).
@@ -502,14 +644,25 @@ class ContinuousBatchingEngine:
         to earlier requests it routed this pass but that the engine has
         not reserved yet (reservation happens inside ``admit``). With
         ``resume`` the block need is the preempted sequence's padded
-        context instead of the fresh-prompt shape."""
+        context instead of the fresh-prompt shape. When the actual
+        ``prompt`` tokens are given and the prefix cache is on, blocks
+        the cache holds LIVE are discounted — sharing them costs no
+        capacity, which is exactly the admission headroom prefix caching
+        buys."""
         if not self.free_slots:
             return False
         if self.kv_layout != "paged":
             return True
-        need = self.resume_blocks(resume) if resume is not None \
-            else self.request_blocks(prompt_len, max_new)
-        return self.allocator.n_available - pending_blocks >= need
+        if resume is not None:
+            need = self.resume_blocks(resume)
+            if self.prefix_cache:
+                need -= self._live_shared_blocks_prepadded(
+                    resume.seq_tokens)
+        else:
+            need = self.request_blocks(prompt_len, max_new)
+            if self.prefix_cache and prompt is not None:
+                need -= self._live_shared_blocks(prompt)
+        return self.allocator.n_available - pending_blocks >= max(0, need)
 
     # ---- admission -------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 8) -> int:
@@ -570,7 +723,124 @@ class ContinuousBatchingEngine:
             n_preempted=req.n_preempted))
         return rid
 
-    def _graft(self, one_cache, slot: int, block_ids=None) -> None:
+    # ---- prefix cache (docs/ARCHITECTURE.md §5) --------------------------
+    @staticmethod
+    @functools.lru_cache(maxsize=4096)
+    def _chain_keys_cached(model: str, block_size: int,
+                           seq_bytes: bytes) -> Tuple[str, ...]:
+        """Memoized: the router hashes the same prompt once per
+        candidate instance per pass otherwise — keys depend only on
+        (model, block size, padded tokens), never on engine state."""
+        seq = np.frombuffer(seq_bytes, np.int32)
+        keys: List[str] = []
+        h = hashlib.sha1(model.encode())
+        for i in range(len(seq) // block_size):
+            h.update(seq[i * block_size:(i + 1) * block_size].tobytes())
+            keys.append(h.hexdigest())
+        return tuple(keys)
+
+    def _chain_keys(self, seq: np.ndarray) -> Tuple[str, ...]:
+        """Chain-hash key per FULL block of ``seq``: an incremental
+        digest over model id + the token ids up to and including that
+        block, so a key matches iff the entire padded prefix matches
+        (left-pad rows are attended, hence part of the content)."""
+        return self._chain_keys_cached(
+            self.cfg.name, self.block_size,
+            np.ascontiguousarray(seq, np.int32).tobytes())
+
+    def _prefix_lookup(self, seq: np.ndarray
+                       ) -> Tuple[List[str], int, Optional[str]]:
+        """Longest cached block-aligned prefix of ``seq``. Returns
+        (keys of full blocks to map SHARED, first uncached token
+        position, copy-on-write source key or None).
+
+        When the cached chain covers the whole (block-aligned) sequence,
+        the last block is NOT mapped shared: its final token must be
+        recomputed (the first decode step needs its logits) and the
+        graft that lands it writes the whole block — so the cached block
+        is copied on divergence instead (read into staging via
+        ``gather_blocks``, scattered back into a private block), and
+        writes only ever target unshared blocks."""
+        keys = self._chain_keys(seq)
+        n_hit = 0
+        for k in keys:
+            if not self.allocator.cached(k):
+                break
+            n_hit += 1
+        bs = self.block_size
+        if n_hit and n_hit * bs >= len(seq):
+            return keys[:n_hit - 1], len(seq) - 1, keys[n_hit - 1]
+        return keys[:n_hit], n_hit * bs, None
+
+    def _padded_seq(self, prompt: np.ndarray) -> np.ndarray:
+        S = _bucket(len(prompt), buckets=SEQ_BUCKETS)
+        seq = np.zeros((S,), np.int32)
+        seq[S - len(prompt):] = prompt
+        return seq
+
+    def cached_prefix_tokens(self, prompt: np.ndarray,
+                             prepadded: bool = False) -> int:
+        """Tokens of ``prompt`` the prefix cache currently holds — the
+        router's prefix-affinity signal (docs/RUNTIME.md §7). Read-only:
+        nothing is acquired."""
+        if not self.prefix_cache:
+            return 0
+        seq = np.asarray(prompt, np.int32) if prepadded \
+            else self._padded_seq(np.asarray(prompt, np.int32))
+        _, pos0, _ = self._prefix_lookup(seq)
+        return pos0
+
+    def _live_shared_blocks_prepadded(self, seq: np.ndarray) -> int:
+        """Blocks an admission of the padded sequence ``seq`` would map
+        from LIVE cached blocks (refcount >= 1) — sharing those costs no
+        capacity, so ``admissible`` discounts them. LRU-parked hits are
+        excluded: reviving one consumes an available block anyway."""
+        keys = self._chain_keys(np.asarray(seq, np.int32))
+        n = 0
+        for k in keys:
+            if not self.allocator.cached_live(k):
+                break
+            n += 1
+        if n and n * self.block_size >= len(seq):
+            n -= 1  # last block stays private (copy-on-write)
+        return n
+
+    def _live_shared_blocks(self, prompt: np.ndarray) -> int:
+        return self._live_shared_blocks_prepadded(
+            self._padded_seq(np.asarray(prompt, np.int32)))
+
+    def _fill_staging(self, staging, block_ids: List[int], rows: int):
+        """Copy the cached prefix KV — rows [0, rows) gathered from the
+        physical ``block_ids`` — into a fresh staging cache, so chunked
+        prefill of the suffix attends exactly what a full prefill would
+        have produced. Every layer is paged here (``supports_prefix_cache``
+        gates admission), so every leaf is a k/v pool."""
+        ids = jnp.asarray(block_ids, jnp.int32)
+
+        def fill(st, pool, stacked: bool):
+            out = dict(st)
+            for key in ("k", "v"):
+                if stacked:
+                    g = gather_blocks_stacked(pool[key], ids)
+                    out[key] = st[key].at[:, 0, :rows].set(g[:, :rows])
+                else:
+                    g = gather_blocks(pool[key], ids)
+                    out[key] = st[key].at[0, :rows].set(g[:rows])
+            return out
+
+        new: Dict = {}
+        if "units" in staging:
+            new["units"] = tuple(
+                fill(sc, fc, stacked=True)
+                for sc, fc in zip(staging["units"], self.cache["units"]))
+        if "tail" in staging:
+            new["tail"] = tuple(
+                fill(sc, fc, stacked=False)
+                for sc, fc in zip(staging["tail"], self.cache["tail"]))
+        return new
+
+    def _graft(self, one_cache, slot: int, block_ids=None,
+               skip_blocks: int = 0) -> None:
         """Scatter a freshly-prefilled single-sequence cache into the
         persistent cache. Dense layers (and windowed/recurrent state in
         both layouts) write batch row ``slot``, zero-padding each leaf up
@@ -578,7 +848,11 @@ class ContinuousBatchingEngine:
         prefill wrote [0, S), decode writes from S on). Paged linear-KV
         layers instead ``scatter_blocks`` the prefilled rows into the
         physical blocks ``block_ids`` the allocator handed this slot —
-        grafting is block-granular, no ``cache_len`` copy."""
+        grafting is block-granular, no ``cache_len`` copy. The first
+        ``skip_blocks`` ids are prefix-cache blocks mapped SHARED: they
+        already hold the right content (possibly for other sequences
+        too), so the scatter starts past them — writes only ever target
+        unshared blocks."""
         def graft_layer(full_c, one_c, batch_axis: int):
             def leaf(t, s):
                 row = jnp.take(s, 0, axis=batch_axis)
@@ -592,15 +866,17 @@ class ContinuousBatchingEngine:
             return jax.tree.map(leaf, full_c, one_c)
 
         def graft_paged(full_c, one_c, stacked: bool):
-            ids = jnp.asarray(block_ids, jnp.int32)
+            ids = jnp.asarray(block_ids[skip_blocks:], jnp.int32)
             # a chunked-prefill staging cache is cache_len long; only the
             # rows the allocated blocks cover are scattered (the written
-            # prefix always fits them, the rest is zeros)
+            # prefix always fits them, the rest is zeros). Shared prefix
+            # blocks are skipped: start is block-aligned by construction.
+            start = skip_blocks * self.block_size
             cap = len(block_ids) * self.block_size
             scatter = scatter_blocks_stacked if stacked else scatter_blocks
             return {key: scatter(full_c[key],
-                                 one_c[key][:, 0, :cap] if stacked
-                                 else one_c[key][0, :cap], ids)
+                                 one_c[key][:, 0, start:cap] if stacked
+                                 else one_c[key][0, start:cap], ids)
                     for key in ("k", "v")}
 
         paged = self.kv_layout == "paged"
@@ -654,32 +930,77 @@ class ContinuousBatchingEngine:
                     seq = np.zeros((S,), np.int32)
                     seq[S - len(w.prompt):] = w.prompt
             reserved = 0
+            shared_ids: List[int] = []
+            pos0 = 0
+            cow_key: Optional[str] = None
             if self.kv_layout == "paged":
                 need_tokens = len(seq) + w.max_new if seq is not None \
                     else self._seq_tokens(len(w.prompt), w.max_new)
-                reserved = self.allocator.blocks_for(need_tokens)
+                need = self.allocator.blocks_for(need_tokens)
+                if self.prefix_cache and seq is not None:
+                    # map the longest cached block-aligned prefix at
+                    # refcount+1 and reserve only the remainder — the
+                    # admission-capacity gain sharing buys. acquire can
+                    # refuse an LRU revival (every remaining block
+                    # promised): the chain simply stops there.
+                    self.n_prefix_lookups += 1
+                    hit_keys, pos0, cow_key = self._prefix_lookup(seq)
+                    for k in hit_keys:
+                        bid = self.allocator.acquire(k)
+                        if bid is None:
+                            break
+                        shared_ids.append(bid)
+                    if len(shared_ids) < len(hit_keys):
+                        pos0 = len(shared_ids) * self.block_size
+                        cow_key = None
+                reserved = need - len(shared_ids)
                 if not self.allocator.reserve(reserved):
+                    if shared_ids:
+                        self.allocator.free(shared_ids)
                     break  # FIFO: head of queue blocks on memory
             self.waiting.pop(0)
             slot = free.pop(0)
             if self.chunked:
                 n0 = 0
-                ids: List[int] = []
+                ids: List[int] = list(shared_ids)
                 if self.kv_layout == "paged":
-                    # physically allocate the prefill prefix now; the
-                    # decode tail of the reservation is claimed lazily at
-                    # block boundaries in step(). block_tables stays on
-                    # the null block until the graft lands.
+                    # physically allocate the uncached prefill prefix
+                    # now; the decode tail of the reservation is claimed
+                    # lazily at block boundaries in step(). block_tables
+                    # stays on the null block until the graft lands.
                     n0 = self.allocator.blocks_for(len(seq))
-                    ids = [self.allocator.alloc_reserved()
-                           for _ in range(n0)]
+                    ids += [self.allocator.alloc_reserved()
+                            for _ in range(n0 - len(shared_ids))]
+                staging = self.model.init_cache(1, self.cache_len,
+                                                self.dtype)
+                if pos0:
+                    # chunked prefill skips straight to the first
+                    # uncached token: staging gets the cached prefix KV
+                    # (gather_blocks), including — copy-on-write — the
+                    # first block_size-1 rows of a fully-covering chain's
+                    # tail block, read via a transient reference
+                    fill_ids = list(shared_ids)
+                    tmp = None
+                    if cow_key is not None:
+                        tmp = self.allocator.acquire(cow_key)
+                        if tmp is None:  # LRU revival refused: shrink
+                            pos0 = len(shared_ids) * self.block_size
+                        else:
+                            fill_ids.append(tmp)
+                    if pos0:
+                        staging = self._fill_staging(staging, fill_ids,
+                                                     pos0)
+                    if tmp is not None:
+                        self.allocator.free([tmp])
+                if pos0:
+                    self.n_prefix_hits += 1
+                    self.n_prefix_hit_tokens += pos0
                 self.slots[slot] = _Slot(
                     request_id=w.request_id, remaining=w.max_new,
                     submit_s=w.submit_s, admit_s=self._now(), blocks=ids,
-                    n_outstanding=reserved - n0, seq_tokens=seq,
-                    base_len=base_len, prefill_pos=0,
-                    staging=self.model.init_cache(1, self.cache_len,
-                                                  self.dtype),
+                    n_outstanding=reserved - (n0 - len(shared_ids)),
+                    n_shared=len(shared_ids), seq_tokens=seq,
+                    base_len=base_len, prefill_pos=pos0, staging=staging,
                     requested_new=w.requested_new, truncated=w.truncated,
                     n_preempted=w.n_preempted)
                 self.pos[slot] = 0
@@ -749,16 +1070,25 @@ class ContinuousBatchingEngine:
                 done_tokens += c
             if logits is not None and not s.prefilling:
                 self._finish_prefill(i, logits)
+        self.n_prefill_chunk_tokens += done_tokens
         return done_tokens
 
     def _finish_prefill(self, slot: int, logits) -> None:
         """Last chunk landed: graft the staging cache into the slot (and,
-        paged, point the block table at the allocated prefix blocks),
-        then hand the slot to the decode loop."""
+        paged, point the block table at the allocated prefix blocks —
+        skipping the shared prefix blocks, which are immutable), then
+        hand the slot to the decode loop. With the prefix cache on, the
+        now-complete full prompt blocks are published under their chain
+        keys so later same-prefix admissions can share them."""
         s = self.slots[slot]
         if self.kv_layout == "paged":
             self.block_tables[slot, :len(s.blocks)] = s.blocks
-            self._graft(s.staging, slot, block_ids=s.blocks)
+            self._graft(s.staging, slot, block_ids=s.blocks,
+                        skip_blocks=s.n_shared)
+            if self.prefix_cache:
+                for i, key in enumerate(self._chain_keys(s.seq_tokens)):
+                    if i >= s.n_shared:
+                        self.allocator.register(key, s.blocks[i])
         else:
             self._graft(s.staging, slot)
         s.staging = None
@@ -770,12 +1100,24 @@ class ContinuousBatchingEngine:
     def preemption_candidates(self) -> List[Tuple[int, int, int]]:
         """(slot, request_id, freeable_blocks) for every preemptible
         resident — decoding slots only, never a mid-chunk prefill (its
-        staging work would be thrown away and re-bought immediately)."""
+        staging work would be thrown away and re-bought immediately).
+        A block mapped by other sequences too (refcount > 1) does not
+        free capacity when this slot releases its reference, so only
+        sole-reference blocks count as freeable."""
         if not self.chunked:
             return []
-        return [(i, s.request_id, len(s.blocks) + s.n_outstanding)
-                for i, s in enumerate(self.slots)
-                if s.active and not s.prefilling]
+        out = []
+        for i, s in enumerate(self.slots):
+            if not s.active or s.prefilling:
+                continue
+            freeable = s.n_outstanding
+            if self.kv_layout == "paged":
+                freeable += sum(1 for b in s.blocks
+                                if self.allocator.refcount(b) == 1)
+            else:
+                freeable += len(s.blocks)
+            out.append((i, s.request_id, freeable))
+        return out
 
     def preempt(self, slot: int, requeue: bool = True) -> PreemptedRequest:
         """Evict the resident sequence in ``slot`` back to a waiting
@@ -927,11 +1269,62 @@ class ContinuousBatchingEngine:
     @property
     def kv_allocated_tokens(self) -> int:
         """Cache positions *committed*: the whole slab for the dense
-        layout, allocated blocks × block_size for the paged one."""
+        layout, LIVE blocks × block_size for the paged one — a block
+        shared by N sequences is counted ONCE, and evicted-but-cached
+        LRU blocks are reclaimable so they do not count."""
         if self.kv_layout == "paged":
-            n_alloc = self.allocator.n_blocks - self.allocator.n_free
-            return n_alloc * self.block_size
+            return self.allocator.n_live * self.block_size
         return self.n_slots * self.cache_len
+
+    @property
+    def kv_unique_used_tokens(self) -> int:
+        """Distinct physical cache positions live sequences occupy:
+        per-block coverage with shared blocks counted once (the paged
+        counterpart of ``kv_used_tokens``, which stays per-sequence
+        logical — under sharing the logical sum can exceed the physical
+        footprint, which is the whole point)."""
+        if self.kv_layout != "paged":
+            return self.kv_used_tokens
+        bs = self.block_size
+        cov: Dict[int, int] = {}
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            if s.prefilling:
+                # pool blocks hold only the shared prefix so far; the
+                # chunked suffix lives in staging until the graft
+                c = min(s.prefill_pos, s.n_shared * bs)
+            else:
+                c = int(self.pos[i]) + 1
+            for idx, bid in enumerate(s.blocks):
+                t = min(bs, c - idx * bs)
+                if t <= 0:
+                    break
+                cov[bid] = max(cov.get(bid, 0), t)
+        return sum(cov.values())
+
+    def kv_block_mapping(self) -> Tuple[int, int]:
+        """(logical block mappings, distinct physical blocks) over the
+        active slots — the pool sums these across instances to price
+        effective blocks without reaching into slot internals."""
+        mapped = [b for s in self.slots if s.active for b in s.blocks]
+        return len(mapped), len(set(mapped))
+
+    @property
+    def kv_shared_frac(self) -> float:
+        """Fraction of live block *mappings* backed by a physical block
+        some other sequence also maps: 1 - distinct/logical. 0 without
+        sharing."""
+        logical, distinct = self.kv_block_mapping()
+        return 1.0 - distinct / logical if logical else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Prompt tokens served from the prefix cache as a fraction of
+        all prompt tokens processed (hit + chunked-prefill) over the
+        engine's lifetime."""
+        total = self.n_prefix_hit_tokens + self.n_prefill_chunk_tokens
+        return self.n_prefix_hit_tokens / total if total else 0.0
 
     @property
     def kv_free_tokens(self) -> int:
@@ -943,8 +1336,13 @@ class ContinuousBatchingEngine:
 
     def stats(self) -> Dict[str, float]:
         """Counters + KV occupancy metrics, so benchmarks can report
-        dense-vs-paged waste without poking engine internals."""
+        dense-vs-paged waste without poking engine internals.
+        ``kv_waste_frac`` counts shared blocks ONCE (unique physical
+        coverage over live allocation); ``kv_used_tokens`` stays
+        per-sequence logical, so used/allocated can exceed 1 under
+        sharing — that surplus is the capacity the prefix cache buys."""
         used = float(self.kv_used_tokens)
+        uniq = float(self.kv_unique_used_tokens)
         alloc = float(self.kv_allocated_tokens)
         return {
             "n_iters": float(self.n_iters),
@@ -954,10 +1352,16 @@ class ContinuousBatchingEngine:
             "n_slots": float(self.n_slots),
             "kv_used_tokens": used,
             "kv_allocated_tokens": alloc,
-            "kv_waste_frac": 1.0 - used / alloc if alloc else 0.0,
+            "kv_waste_frac": 1.0 - uniq / alloc if alloc else 0.0,
             "kv_reserved_tokens": float(
                 self.allocator.n_reserved * self.block_size
                 if self.kv_layout == "paged" else 0),
+            "kv_cached_tokens": float(
+                self.allocator.n_cached * self.block_size
+                if self.kv_layout == "paged" else 0),
+            "kv_shared_frac": self.kv_shared_frac,
+            "prefix_hit_rate": self.prefix_hit_rate,
+            "n_prefix_hits": float(self.n_prefix_hits),
             "queue_depth": float(len(self.waiting)),
             "n_preempted": float(self.n_preempted),
             "prefill_backlog_tokens": float(self.prefill_backlog_tokens),

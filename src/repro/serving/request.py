@@ -33,6 +33,12 @@ class Request:
     #: prefill tokens still to process (reset to prompt + emitted context
     #: on preemption — recompute-on-resume, docs/RUNTIME.md §8)
     prefill_remaining: int = 0
+    #: templated workload (docs/ARCHITECTURE.md §5): the leading
+    #: ``prefix_tokens`` of the prompt are one of a small population of
+    #: shared prefixes, identified by ``prefix_id`` (-1 = no shared
+    #: prefix); a prefix-cache hit skips their prefill
+    prefix_id: int = -1
+    prefix_tokens: int = 0
     #: times this request was preempted (hysteresis caps it)
     n_preempted: int = 0
     # filled at dispatch/completion:

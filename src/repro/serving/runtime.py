@@ -50,7 +50,8 @@ from repro.config.base import ModelConfig
 from repro.core.interference import engine_features
 from repro.core.utility import utility
 from repro.serving import latency_model as lm
-from repro.serving.engine import ContinuousBatchingEngine, PreemptedRequest
+from repro.serving.engine import (ContinuousBatchingEngine,
+                                  PreemptedRequest, supports_prefix_cache)
 
 # instance lifecycle states (docs/RUNTIME.md state machine)
 STARTING = "starting"
@@ -165,7 +166,8 @@ class ModelInstancePool:
                  preempt_margin_ms: float = 50.0,
                  preempt_cooldown_steps: int = 8,
                  max_preemptions: int = 2,
-                 token_budget: Optional[int] = None):
+                 token_budget: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.configs = dict(configs)
         self.max_instances = max_instances
         self.max_slots = max_slots
@@ -181,6 +183,12 @@ class ModelInstancePool:
         self.block_size = block_size
         self.kv_block_budget = kv_block_budget
         self.kv_blocks_free = kv_block_budget
+        #: vLLM-style prefix caching (docs/ARCHITECTURE.md §5): paged
+        #: engines share full immutable prompt blocks at refcount+1 and
+        #: the router gains prefix affinity. Models whose layer stack
+        #: cannot page every decode state (recurrent/windowed/frontend)
+        #: silently serve without it — per-model capability, one flag.
+        self.prefix_cache = prefix_cache and kv_layout == "paged"
         #: target grant for a paged instance; default = dense-equivalent
         #: worst case. Sizing it from measured occupancy
         #: (``occupancy_tokens_per_seq``) is how a paged pool fits more
@@ -312,7 +320,9 @@ class ModelInstancePool:
             grant = 0  # unlimited dense pool: nothing to account
         if self.kv_layout == "paged":
             kw = {"kv_layout": "paged", "block_size": self.block_size,
-                  "kv_blocks": grant}
+                  "kv_blocks": grant,
+                  "prefix_cache": self.prefix_cache
+                  and supports_prefix_cache(self.configs[model])}
         tmpl = self._templates.get(model)
         eng = ContinuousBatchingEngine(
             self.configs[model], max_slots=self.max_slots,
@@ -558,7 +568,7 @@ class ModelInstancePool:
                             if i.engine.admissible(
                                 len(req.prompt), req.max_new_tokens,
                                 pending.get(i.instance_id, 0),
-                                resume=req.resume)]
+                                resume=req.resume, prompt=req.prompt)]
 
                 # paged engines additionally gate on free KV blocks —
                 # a slot is only admissible when the request's worst-case
@@ -581,7 +591,20 @@ class ModelInstancePool:
                         rejected.append(self._reject(req))
                         continue
                     break
-                inst = max(cands, key=lambda i: cap - i.n_resident)
+                if self.prefix_cache:
+                    # prefix affinity (docs/RUNTIME.md §7): same-prefix
+                    # requests prefer the instance whose cache already
+                    # holds their prefix (hit tokens first, least-loaded
+                    # as the tie-break), so shared prompts concentrate
+                    # instead of re-prefilling on every instance
+                    inst = max(cands, key=lambda i: (
+                        i.engine.cached_prefix_tokens(
+                            req.resume.seq_tokens if req.resume is not None
+                            else req.prompt,
+                            prepadded=req.resume is not None),
+                        cap - i.n_resident))
+                else:
+                    inst = max(cands, key=lambda i: cap - i.n_resident)
                 heapq.heappop(q)
                 if self.kv_layout == "paged":
                     pending[inst.instance_id] = \
@@ -788,10 +811,38 @@ class ModelInstancePool:
             return 0.0
         return lm.fit_occupancy(self.occupancy_samples[-_SAMPLE_WINDOW:])
 
+    def prefix_hit_rate(self) -> float:
+        """Prompt tokens served from prefix caches as a fraction of all
+        prompt tokens processed, aggregated over live instances — a
+        scheduler state feature (docs/RUNTIME.md §7)."""
+        live = self.live()
+        hit = sum(getattr(i.engine, "n_prefix_hit_tokens", 0)
+                  for i in live)
+        total = hit + sum(getattr(i.engine, "n_prefill_chunk_tokens", 0)
+                          for i in live)
+        return hit / total if total else 0.0
+
+    def kv_shared_frac(self) -> float:
+        """Fraction of live block mappings backed by a block another
+        resident sequence also maps, pool-wide: 1 - distinct/logical.
+        The guard uses it to price *effective* blocks — refcounted
+        blocks charge the shared budget once."""
+        logical = distinct = 0
+        for i in self.live():
+            if i.engine.kv_layout != "paged":
+                continue
+            lg, d = i.engine.kv_block_mapping()
+            logical += lg
+            distinct += d
+        return 1.0 - distinct / logical if logical else 0.0
+
     def kv_occupancy(self) -> Dict[str, float]:
         """Real occupancy of the shared KV budget — what grounds the
         ``PoolScheduler`` Eq.-4 guard when the pool is paged. Budget
-        fields are 0 for unlimited budgets."""
+        fields are 0 for unlimited budgets. ``allocated_tokens`` counts
+        a refcount-shared block ONCE (each engine reports distinct live
+        blocks), so the gap to the logical ``used_tokens`` is exactly
+        what prefix sharing saves."""
         budget_blocks = self.kv_block_budget or 0
         committed = sum(i.kv_blocks for i in self.live())
         return {
@@ -802,6 +853,8 @@ class ModelInstancePool:
             "free_blocks": float(self.kv_blocks_free or 0),
             "committed_blocks": float(committed),
             "tokens_per_seq": self.occupancy_tokens_per_seq(),
+            "shared_frac": self.kv_shared_frac(),
+            "prefix_hit_rate": self.prefix_hit_rate(),
         }
 
     def slot_ms(self, model: str) -> float:

@@ -173,7 +173,15 @@ class EdgeServingEnv:
         self.workload = PoissonWorkload(
             self.cfg.arrival_rps, self.models, seed=self.seed,
             decode_steps_mean=self.cfg.decode_steps_mean,
-            prefill_tokens_mean=self.cfg.prefill_tokens_mean)
+            prefill_tokens_mean=self.cfg.prefill_tokens_mean,
+            shared_prefix_tokens=self.cfg.shared_prefix_tokens,
+            prefix_population=self.cfg.prefix_population)
+        #: prefix cache twin (docs/ARCHITECTURE.md §5): per-model set of
+        #: shared-prefix ids some admitted request already prefilled —
+        #: later same-prefix admissions skip those tokens
+        self._seen_prefixes: Dict[str, set] = {m: set()
+                                               for m in self.models}
+        self.prefix_hit_tokens = 0
         self.queues: Dict[str, RequestQueue] = {
             m: RequestQueue(m, self.cfg.max_queue) for m in self.models}
         self._events: List[tuple] = []
@@ -352,6 +360,17 @@ class EdgeServingEnv:
                 # (prefill_remaining = prompt + emitted context)
                 r.remaining = max(1, r.decode_steps)
                 r.prefill_remaining = r.prefill_tokens
+                if self.cfg.prefix_cache and r.prefix_id >= 0:
+                    # prefix-cache twin: a shared prefix some earlier
+                    # request of this model already prefilled is skipped
+                    # (the engine's block-sharing hit, analytically)
+                    seen = self._seen_prefixes[sess.model]
+                    if r.prefix_id in seen:
+                        r.prefill_remaining = max(
+                            0, r.prefill_remaining - r.prefix_tokens)
+                        self.prefix_hit_tokens += r.prefix_tokens
+                    else:
+                        seen.add(r.prefix_id)
             sess.active.append(r)
             n += 1
         return n
@@ -599,4 +618,5 @@ class EdgeServingEnv:
             "mean_batch": float(np.mean([r.n_requests for r in rounds])),
             "mean_mc": float(np.mean([r.m_c for r in rounds])),
             "mean_iters": float(np.mean([r.n_iters for r in rounds])),
+            "prefix_hit_tokens": float(self.prefix_hit_tokens),
         }

@@ -17,7 +17,9 @@ class PoissonWorkload:
     def __init__(self, rps: float = 30.0, models: Optional[Sequence[str]] = None,
                  mix: Optional[Dict[str, float]] = None, seed: int = 0,
                  decode_steps_mean: float = 1.0,
-                 prefill_tokens_mean: float = 0.0):
+                 prefill_tokens_mean: float = 0.0,
+                 shared_prefix_tokens: float = 0.0,
+                 prefix_population: int = 4):
         """``rps`` is the PER-MODEL arrival rate (paper §V-A: 30 rps per
         served model); the aggregate rate is rps * len(models).
 
@@ -27,7 +29,13 @@ class PoissonWorkload:
         continuous batching (docs/ARCHITECTURE.md §5) exploits.
         ``prefill_tokens_mean`` > 0 additionally gives each request a
         geometric prompt length that must be prefilled before decoding
-        (the chunked-prefill regime)."""
+        (the chunked-prefill regime).
+
+        ``shared_prefix_tokens`` > 0 makes the trace *templated*
+        (docs/ARCHITECTURE.md §5): each request's prompt starts with one
+        of ``prefix_population`` shared prefixes of that length (drawn
+        uniformly), prepended to its geometric unique tail — the
+        workload regime the prefix cache exploits."""
         self.models = list(models or EDGE_MODELS.keys())
         self.rps = rps * len(self.models)
         if mix is None:
@@ -37,6 +45,8 @@ class PoissonWorkload:
         self.rng = np.random.default_rng(seed)
         self.decode_steps_mean = max(1.0, decode_steps_mean)
         self.prefill_tokens_mean = max(0.0, prefill_tokens_mean)
+        self.shared_prefix_tokens = max(0.0, shared_prefix_tokens)
+        self.prefix_population = max(1, prefix_population)
         self.now_ms = 0.0
 
     def _draw_decode_steps(self) -> int:
@@ -49,16 +59,27 @@ class PoissonWorkload:
             return 0
         return int(self.rng.geometric(1.0 / self.prefill_tokens_mean))
 
+    def _draw_prefix(self) -> tuple:
+        """(prefix_id, prefix_tokens) of the shared template this
+        request starts with; (-1, 0) for untemplated workloads."""
+        if self.shared_prefix_tokens <= 0.0:
+            return -1, 0
+        return (int(self.rng.integers(self.prefix_population)),
+                int(self.shared_prefix_tokens))
+
     def next_request(self) -> Request:
         gap_ms = self.rng.exponential(1000.0 / self.rps)
         self.now_ms += gap_ms
         name = self.rng.choice(self.models, p=self.probs)
         prof = EDGE_MODELS[name]
+        prefix_id, prefix_tokens = self._draw_prefix()
         return Request(model=name, input_type=prof.task,
                        input_shape=prof.input_shape, slo_ms=prof.slo_ms,
                        arrival_ms=self.now_ms,
                        decode_steps=self._draw_decode_steps(),
-                       prefill_tokens=self._draw_prefill_tokens())
+                       prefill_tokens=prefix_tokens
+                       + self._draw_prefill_tokens(),
+                       prefix_id=prefix_id, prefix_tokens=prefix_tokens)
 
     def until(self, t_ms: float) -> Iterator[Request]:
         while True:

@@ -2,39 +2,29 @@
 continuation is math-identical to single-shot prefill, the engine's
 per-iteration token budget bounds prefill+decode work, and the submit
 clamp is surfaced as ``ContinuousResult.truncated``."""
-import dataclasses
-
 import numpy as np
 import pytest
 
-from repro.config.base import ModelConfig
+from conftest import KIND_CFGS, TINY
 from repro.serving.engine import (ContinuousBatchingEngine, InferenceEngine,
                                   SEQ_BUCKETS, _bucket)
-
-TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
-                   n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=97)
-TINY_SWA = dataclasses.replace(TINY, name="tiny-swa", sliding_window=8,
-                               block_pattern=("local_attn",))
-TINY_RWKV = dataclasses.replace(TINY, name="tiny-rwkv", family="ssm",
-                                block_pattern=("rwkv",), rwkv_head_size=16)
-TINY_HYBRID = dataclasses.replace(TINY, name="tiny-hybrid", family="hybrid",
-                                  block_pattern=("rglru", "attn"))
 
 
 # ------------------------------------------------- model-level identity
 @pytest.mark.slow
-@pytest.mark.parametrize("cfg", [TINY, TINY_SWA, TINY_RWKV, TINY_HYBRID],
-                         ids=lambda c: c.name)
-def test_prefill_chunk_matches_full_prefill(cfg):
+@pytest.mark.parametrize("kind", sorted(KIND_CFGS))
+def test_prefill_chunk_matches_full_prefill(kind):
     """Processing a prompt in chunks through ``prefill_chunk`` must be
-    token-identical to one full ``prefill`` — for linear attention,
-    sliding-window rings and recurrent state alike."""
+    token-identical to one full ``prefill`` — for every layer family
+    (linear attention, sliding-window rings, recurrent state, unrolled
+    tails)."""
     import jax
     import jax.numpy as jnp
 
     from repro.models import build_model
     from repro.models.transformer import pad_cache
 
+    cfg = KIND_CFGS[kind]
     S, extra = 32, 6
     m = build_model(cfg, remat=False)
     p = m.init(jax.random.PRNGKey(0))

@@ -3,15 +3,13 @@ simulator parity with round mode (docs/ARCHITECTURE.md §5/§6)."""
 import numpy as np
 import pytest
 
-from repro.config.base import ModelConfig, ServingConfig
+from conftest import TINY
+from repro.config.base import ServingConfig
 from repro.core.baselines import FixedScheduler
 from repro.serving.bcedge import run_episode
 from repro.serving.engine import ContinuousBatchingEngine, InferenceEngine
 from repro.serving.simulator import EdgeServingEnv
 from repro.serving.workload import PoissonWorkload
-
-TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
-                   n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=97)
 
 
 @pytest.fixture(scope="module")
@@ -94,15 +92,18 @@ def test_engine_rejects_oversized_prompt():
 def test_bucket_rejects_overlength_prompt():
     """Regression: _bucket silently clamped n > buckets[-1] to the
     largest bucket, so submit() under-counted S and its cache-fit check
-    passed for prompts that do not actually fit the cache."""
+    passed for prompts that do not actually fit the cache. (The largest
+    bucket is 640 since the prefix-cache work: 512-token shared
+    prefixes plus a tail must fit one bucket.)"""
     from repro.serving.engine import SEQ_BUCKETS, _bucket
     assert _bucket(512, buckets=SEQ_BUCKETS) == 512
+    assert _bucket(640, buckets=SEQ_BUCKETS) == 640
     with pytest.raises(ValueError):
-        _bucket(513, buckets=SEQ_BUCKETS)
+        _bucket(641, buckets=SEQ_BUCKETS)
     eng = ContinuousBatchingEngine(TINY, max_slots=1, max_seq=1024)
     with pytest.raises(ValueError):
-        # would have been admitted pre-fix (clamped S=512 "fits" 1024)
-        eng.submit(np.arange(1, 601, dtype=np.int32) % 97)
+        # would have been admitted pre-fix (clamped S=640 "fits" 1024)
+        eng.submit(np.arange(1, 701, dtype=np.int32) % 97)
 
 
 def test_engine_rejects_enc_dec():

@@ -1,0 +1,224 @@
+"""Randomized differential stress harness for the continuous engine
+(docs/ARCHITECTURE.md §5).
+
+Each seeded schedule interleaves submit / step / preempt-resume ops over
+a pool of mixed-length prompts with shared AND divergent prefixes,
+across engine variants (dense + paged layouts, prefix cache on/off,
+token budget on/off, tight block budgets that force LRU reclaim), and
+asserts:
+
+* after EVERY operation — allocator conservation:
+  ``n_free + n_cached + n_live == n_blocks`` (disjoint id sets),
+  ``n_available >= 0``, refcount(b) == number of slots mapping b (no
+  block owned by two slots without a refcount), block tables mirror the
+  slot block lists, the null block is never mapped;
+* for EVERY finished request — greedy output token-identical to a
+  per-request uninterrupted oracle run (fresh single-slot dense engine,
+  shared weights), regardless of how the schedule batched, preempted,
+  chunked or block-shared it;
+* after the drain — every reference returned (no leak, no double free).
+
+``ENGINE_FUZZ_SCHEDULES`` sets the full-sweep schedule count (default
+200 — the CI full-suite floor; the nightly fuzz job raises it). The
+non-slow smoke variant keeps tier-1 fast.
+"""
+import os
+import random
+
+import numpy as np
+import pytest
+
+from conftest import KIND_CFGS, TINY
+from repro.serving.engine import ContinuousBatchingEngine
+
+N_SCHEDULES = int(os.environ.get("ENGINE_FUZZ_SCHEDULES", "200"))
+
+MAX_SEQ = 128
+MAX_NEW_CHOICES = (2, 4, 7)
+
+_TEMPLATES = {}
+_ORACLE = {}
+
+
+def _template(cfg):
+    """One weight/jit-cache donor per config, so every fuzz engine and
+    every oracle run share identical parameters."""
+    if cfg.name not in _TEMPLATES:
+        _TEMPLATES[cfg.name] = ContinuousBatchingEngine(
+            cfg, max_slots=1, max_seq=MAX_SEQ, seed=0)
+    return _TEMPLATES[cfg.name]
+
+
+def _oracle(cfg, prompt: np.ndarray, max_new: int) -> np.ndarray:
+    """Uninterrupted single-request greedy run (memoized)."""
+    key = (cfg.name, prompt.tobytes(), max_new)
+    if key not in _ORACLE:
+        eng = ContinuousBatchingEngine(cfg, max_slots=1, max_seq=MAX_SEQ,
+                                       seed=0, share_from=_template(cfg))
+        _ORACLE[key] = eng.run([prompt], max_new_tokens=max_new)[0].tokens
+    return _ORACLE[key]
+
+
+def _prompt_pool(cfg):
+    """Mixed-length prompts: two shared-prefix families (equal and
+    unequal tail lengths — unequal ones land at different pad offsets,
+    so they must NOT share), divergent one-offs, and one exact duplicate
+    (the full-cover copy-on-write path)."""
+    rng = np.random.default_rng(99)
+    v = cfg.vocab_size
+    pool = []
+    for _ in range(2):
+        prefix = rng.integers(1, v, 24).astype(np.int32)
+        for tail_len in (4, 4, 8):
+            pool.append(np.concatenate(
+                [prefix, rng.integers(1, v, tail_len).astype(np.int32)]))
+    pool += [rng.integers(1, v, n).astype(np.int32)
+             for n in (3, 9, 17, 30)]
+    pool.append(pool[0].copy())  # exact duplicate
+    return pool
+
+
+def _check_invariants(eng, ctx: str) -> None:
+    al = eng.allocator
+    if al is not None:
+        free, lru = set(al._free), set(al._lru)
+        out = set(al._outstanding)
+        assert not (free & lru) and not (free & out) and not (lru & out), \
+            f"{ctx}: allocator id sets overlap"
+        assert len(free) + len(lru) + len(out) == al.n_blocks, \
+            f"{ctx}: conservation broken " \
+            f"({len(free)}+{len(lru)}+{len(out)} != {al.n_blocks})"
+        assert al.n_available >= 0, f"{ctx}: n_available < 0"
+        assert al.n_reserved <= al.n_free + al.n_cached, \
+            f"{ctx}: reservations exceed reclaimable blocks"
+        counts = {}
+        for s in eng.slots:
+            if not s.active:
+                continue
+            assert len(set(s.blocks)) == len(s.blocks), \
+                f"{ctx}: slot maps a block twice"
+            for b in s.blocks:
+                counts[b] = counts.get(b, 0) + 1
+        assert 0 not in counts, f"{ctx}: null block mapped"
+        for b, c in counts.items():
+            assert al.refcount(b) == c, \
+                f"{ctx}: block {b} mapped by {c} slots, refcount " \
+                f"{al.refcount(b)}"
+        assert set(counts) == out, \
+            f"{ctx}: live blocks != mapped blocks"
+    if eng.block_tables is not None:
+        for i, s in enumerate(eng.slots):
+            if s.active and not s.prefilling:
+                n = len(s.blocks)
+                np.testing.assert_array_equal(
+                    eng.block_tables[i, :n], s.blocks, err_msg=ctx)
+                assert not eng.block_tables[i, n:].any(), ctx
+            else:
+                # mid-prefill slots point at the null block until the
+                # graft lands (writes go to staging, not the pool)
+                assert not eng.block_tables[i].any(), ctx
+
+
+def _engine_variant(cfg, variant: int):
+    """Rotate the engine configurations the schedules exercise."""
+    if variant == 0:
+        return ContinuousBatchingEngine(
+            cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
+            share_from=_template(cfg))
+    if variant == 1:
+        return ContinuousBatchingEngine(
+            cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
+            share_from=_template(cfg), kv_layout="paged", block_size=8)
+    if variant == 2:
+        kw = {"prefix_cache": True} \
+            if cfg.name in ("tiny", "tiny-tail") else {}
+        return ContinuousBatchingEngine(
+            cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
+            share_from=_template(cfg), kv_layout="paged", block_size=8,
+            token_budget=12, **kw)
+    # tight block budget + prefix cache: forces queueing on memory,
+    # LRU revivals and reclaims
+    kw = {"prefix_cache": True} if cfg.name in ("tiny", "tiny-tail") \
+        else {}
+    return ContinuousBatchingEngine(
+        cfg, max_slots=4, max_seq=MAX_SEQ, seed=0,
+        share_from=_template(cfg), kv_layout="paged", block_size=8,
+        kv_blocks=14, **kw)
+
+
+def _run_schedule(cfg, seed: int) -> None:
+    rng = random.Random(seed)
+    eng = _engine_variant(cfg, seed % 4)
+    prompts = _prompt_pool(cfg)
+    expected = {}
+    results = {}
+    ctx = f"cfg={cfg.name} seed={seed} variant={seed % 4}"
+
+    def step_engine():
+        for r in eng.step():
+            results[r.request_id] = r
+
+    for _ in range(rng.randint(8, 18)):
+        roll = rng.random()
+        if roll < 0.40:
+            p = rng.choice(prompts)
+            mn = rng.choice(MAX_NEW_CHOICES)
+            try:
+                rid = eng.submit(p, max_new_tokens=mn)
+            except ValueError:
+                pass  # request larger than the whole pool: rejected
+            else:
+                expected[rid] = (p, mn)
+        elif roll < 0.85:
+            step_engine()
+        else:
+            cands = eng.decoding_slots
+            if cands and eng.chunked:
+                eng.preempt(rng.choice(cands))  # requeue + resume
+        _check_invariants(eng, ctx)
+
+    guard = 600
+    while (eng.waiting or eng.active_slots) and guard:
+        step_engine()
+        _check_invariants(eng, ctx)
+        guard -= 1
+    assert guard, f"{ctx}: engine failed to drain"
+    assert set(results) == set(expected), \
+        f"{ctx}: lost requests {set(expected) - set(results)}"
+    for rid, (p, mn) in expected.items():
+        got = results[rid]
+        assert not got.truncated, f"{ctx} rid={rid}: unexpected clamp"
+        assert np.array_equal(got.tokens, _oracle(cfg, p, mn)), \
+            f"{ctx} rid={rid}: tokens diverge from oracle " \
+            f"({got.tokens} vs {_oracle(cfg, p, mn)})"
+    al = eng.allocator
+    if al is not None:
+        assert al.n_live == 0 and al.n_reserved == 0, \
+            f"{ctx}: leaked references after drain"
+        assert al.n_free + al.n_cached == al.n_blocks, ctx
+
+
+def test_fuzz_smoke_schedules():
+    """Tier-1 slice of the sweep: a handful of schedules over the dense
+    and paged+prefix-cache variants of the canonical tiny model."""
+    for seed in range(8):
+        _run_schedule(TINY, seed)
+
+
+@pytest.mark.slow
+def test_fuzz_full_sweep_tiny():
+    """The CI sweep: >= ENGINE_FUZZ_SCHEDULES seeded schedules (default
+    200) on the canonical model across all four engine variants."""
+    for seed in range(N_SCHEDULES):
+        _run_schedule(TINY, seed)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kind", ["tail", "rglru", "windowed"])
+def test_fuzz_layer_families(kind):
+    """Shorter sweeps over the other layer families: the unrolled tail
+    (prefix-cacheable) plus recurrent and windowed stacks, whose hybrid
+    dense/paged cache surgery must hold under the same schedules."""
+    cfg = KIND_CFGS[kind]
+    for seed in range(max(8, N_SCHEDULES // 10)):
+        _run_schedule(cfg, seed)

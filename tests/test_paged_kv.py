@@ -2,40 +2,22 @@
 gather/scatter block surgery, prefill-graft round trips across layer
 kinds, dense/paged token identity, and the pool's shared block budget
 (docs/ARCHITECTURE.md §5, docs/RUNTIME.md §7)."""
+import os
+
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 import jax.numpy as jnp
 
+from conftest import KIND_CFGS, TINY
 from repro.config.base import ModelConfig
 from repro.models.transformer import (gather_blocks, paged_layer_kind,
                                       scatter_blocks)
 from repro.serving.engine import (BlockAllocator, ContinuousBatchingEngine,
                                   InferenceEngine)
 from repro.serving.runtime import ModelInstancePool
-
-TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
-                   n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=97)
-
-#: one config per layer-kind family the graft must round-trip
-KIND_CFGS = {
-    "global": TINY,
-    "windowed": ModelConfig(name="tiny-win", family="dense", n_layers=2,
-                            d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
-                            vocab_size=97,
-                            block_pattern=("attn", "local_attn"),
-                            sliding_window=16),
-    "rglru": ModelConfig(name="tiny-rg", family="hybrid", n_layers=2,
-                         d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
-                         vocab_size=97, block_pattern=("rglru", "attn")),
-    "rwkv": ModelConfig(name="tiny-rwkv", family="ssm", n_layers=2,
-                        d_model=64, n_heads=2, n_kv_heads=2, d_ff=64,
-                        vocab_size=97, block_pattern=("rwkv",),
-                        rwkv_head_size=32),
-    "tail": ModelConfig(name="tiny-tail", family="dense", n_layers=3,
-                        d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
-                        vocab_size=97, block_pattern=("attn", "attn")),
-}
 
 
 # ------------------------------------------------------------ allocator
@@ -64,6 +46,150 @@ def test_allocator_never_hands_out_null_block():
     assert sorted(ids) == [1, 2, 3, 4]  # id 0 (null) never allocated
     with pytest.raises(AssertionError):
         al.alloc_reserved()  # nothing reserved any more
+
+
+# ----------------------------------------- refcount / prefix-cache
+def test_refcount_decrement_to_zero_frees_exactly_once():
+    """A block shared by two sequences frees on the SECOND release, and
+    only once: unregistered blocks return to the free list, registered
+    ones park in the cached-LRU pool (still reclaimable)."""
+    al = BlockAllocator(4, block_size=8)
+    assert al.reserve(2)
+    a, b = al.alloc_reserved(), al.alloc_reserved()
+    al.register("k-a", a)
+    shared = al.acquire("k-a")
+    assert shared == a and al.refcount(a) == 2
+    assert al.n_live == 2  # refcounted blocks count ONCE
+    al.free([a])
+    assert al.refcount(a) == 1 and al.n_live == 2  # still held
+    al.free([a])           # second (last) reference: parks in LRU
+    assert al.refcount(a) == 0 and al.n_cached == 1 and al.n_free == 2
+    al.free([b])           # unregistered: straight to the free list
+    assert al.n_free == 3 and al.n_cached == 1
+    assert al.n_free + al.n_cached + al.n_live == al.n_blocks
+
+
+def test_double_free_still_raises_under_sharing():
+    """More frees than references is a bug even when the block was
+    legitimately shared for a while."""
+    al = BlockAllocator(4, block_size=8)
+    assert al.reserve(1)
+    a = al.alloc_reserved()
+    al.register("k", a)
+    assert al.acquire("k") == a    # refcount 2
+    al.free([a])
+    al.free([a])                   # refcount 0: parked in LRU
+    with pytest.raises(ValueError):
+        al.free([a])               # third free of two references
+    with pytest.raises(ValueError):
+        al.free([a, a])            # duplicate within one call
+
+
+def test_reserve_cancel_accounting_unchanged_by_cache_hits():
+    """Cache hits must not leak into reservation accounting: acquiring a
+    LIVE shared block costs nothing, and unreserve symmetry holds."""
+    al = BlockAllocator(8, block_size=8)
+    assert al.reserve(3)
+    ids = [al.alloc_reserved() for _ in range(3)]
+    for i, bid in enumerate(ids):
+        al.register(f"k{i}", bid)
+    avail0, res0 = al.n_available, al.n_reserved
+    assert al.reserve(2)
+    shared = [al.acquire(f"k{i}") for i in range(3)]  # live: free hits
+    assert shared == ids
+    assert al.n_available == avail0 - 2       # only the reserve moved it
+    assert al.n_reserved == res0 + 2
+    al.unreserve(2)
+    al.free(shared)
+    assert al.n_available == avail0 and al.n_reserved == res0
+
+
+def test_lru_reclaim_never_frees_live_blocks():
+    """Under pressure the allocator reclaims only refcount-0 cached
+    blocks (oldest first, cache entry invalidated); live blocks are
+    untouchable."""
+    al = BlockAllocator(4, block_size=8)
+    assert al.reserve(4)
+    ids = [al.alloc_reserved() for _ in range(4)]
+    for i, bid in enumerate(ids):
+        al.register(f"k{i}", bid)
+    al.free(ids[:2])               # k0, k1 parked in LRU (that order)
+    assert al.n_cached == 2 and al.n_free == 0
+    assert al.reserve(1)
+    got = al.alloc_reserved()      # must reclaim the LRU-oldest: k0
+    assert got == ids[0]
+    assert not al.cached("k0")     # entry invalidated
+    assert al.cached("k1") and al.cached("k2") and al.cached("k3")
+    assert ids[2] in al._outstanding and ids[3] in al._outstanding
+    assert al.n_reclaimed == 1
+
+
+def test_acquire_refuses_lru_revival_that_breaks_reservations():
+    """Reviving an evicted-but-cached block consumes an available block;
+    when everything left is promised to reservations the acquire must
+    miss instead of stealing the promise."""
+    al = BlockAllocator(2, block_size=8)
+    assert al.reserve(1)
+    a = al.alloc_reserved()
+    al.register("k", a)
+    al.free([a])                   # parked in LRU; free list has 1
+    assert al.reserve(2)           # promises BOTH remaining blocks
+    assert al.n_available == 0
+    assert al.acquire("k") is None  # revival would break the promise
+    ids = [al.alloc_reserved(), al.alloc_reserved()]
+    assert sorted(ids) == [1, 2]
+
+
+#: the nightly fuzz job raises this (the bundled stub caps itself)
+_MAX_EXAMPLES = int(os.environ.get("FUZZ_MAX_EXAMPLES", "25"))
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=_MAX_EXAMPLES, deadline=None)
+def test_allocator_conservation_under_random_ops(seed):
+    """Randomized schedule of reserve/alloc/free/register/acquire ops:
+    conservation (free + cached + live == n_blocks), non-negative
+    availability and exact refcounts hold after every operation."""
+    import random
+
+    r = random.Random(seed)
+    al = BlockAllocator(8, block_size=4)
+    live = []          # [bid, refs] we still owe frees for
+    registered = 0
+    for _ in range(60):
+        op = r.randrange(5)
+        if op == 0 and al.n_available > 0:
+            al.reserve(1)
+        elif op == 1 and al.n_reserved > 0:
+            live.append([al.alloc_reserved(), 1])
+        elif op == 2 and live:
+            ent = r.choice(live)
+            al.free([ent[0]])
+            ent[1] -= 1
+            if ent[1] == 0:
+                live.remove(ent)
+        elif op == 3 and live:
+            bid = r.choice(live)[0]
+            al.register(f"key-{registered}", bid)
+            registered += 1
+        elif op == 4 and registered:
+            bid = al.acquire(f"key-{r.randrange(registered)}")
+            if bid is not None:
+                for ent in live:
+                    if ent[0] == bid:
+                        ent[1] += 1
+                        break
+                else:
+                    live.append([bid, 1])
+        assert al.n_free + al.n_cached + al.n_live == al.n_blocks
+        assert al.n_available >= 0
+        assert al.n_reserved <= al.n_free + al.n_cached
+        for bid, refs in live:
+            assert al.refcount(bid) == refs
+    for bid, refs in live:
+        for _ in range(refs):      # dup check is per call: one at a time
+            al.free([bid])
+    assert al.n_free + al.n_cached == al.n_blocks and al.n_live == 0
 
 
 # ------------------------------------------------------------ pure API

@@ -6,13 +6,10 @@ triggers/holds back correctly, double-frees raise, and
 import numpy as np
 import pytest
 
-from repro.config.base import ModelConfig, ServingConfig
+from conftest import TINY, make_pool
+from repro.config.base import ServingConfig
 from repro.serving.engine import BlockAllocator, ContinuousBatchingEngine
-from repro.serving.runtime import ModelInstancePool
 from repro.serving.simulator import EdgeServingEnv
-
-TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=32,
-                   n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=97)
 
 
 def _prompt(rng, n):
@@ -130,7 +127,7 @@ def _calibrated_pool(**kw):
     kw.setdefault("max_slots", 1)
     kw.setdefault("max_seq", 64)
     kw.setdefault("preemption", True)
-    pool = ModelInstancePool({"tiny": TINY}, **kw)
+    pool = make_pool(TINY, **kw)
     pool.scale_to("tiny", 1)
     rng = np.random.default_rng(3)
     for _ in range(2):
@@ -201,8 +198,7 @@ def test_no_preemption_thrash_under_sustained_overload():
 def test_run_until_drained_raises_on_exhaustion():
     """Regression: max_steps exhaustion silently returned partial
     results, so benchmarks read partial completions as full drains."""
-    pool = ModelInstancePool({"tiny": TINY}, max_instances=1, max_slots=1,
-                             max_seq=64)
+    pool = make_pool(TINY, max_instances=1, max_slots=1)
     pool.scale_to("tiny", 1)
     rng = np.random.default_rng(4)
     pool.submit("tiny", _prompt(rng, 6), slo_ms=60_000.0, max_new_tokens=8)
@@ -217,8 +213,7 @@ def test_run_until_drained_returns_on_unservable_queue():
     """Queued work whose model has NO running instance cannot progress:
     that is a clean return (everything drainable was drained), not an
     exhaustion error — and not a 10k-step spin."""
-    pool = ModelInstancePool({"tiny": TINY}, max_instances=1, max_slots=1,
-                             max_seq=64)
+    pool = make_pool(TINY, max_instances=1, max_slots=1)
     rng = np.random.default_rng(5)
     pool.submit("tiny", _prompt(rng, 6), slo_ms=60_000.0, max_new_tokens=2)
     assert pool.run_until_drained() == []
