@@ -31,6 +31,7 @@ MODULES = [
     "fig_paged_kv",
     "fig_preemption_chunked",
     "fig_prefix_cache",
+    "fig_speculative",
     "roofline_table",
 ]
 

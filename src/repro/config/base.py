@@ -214,6 +214,13 @@ class ServingConfig:
     shared_prefix_tokens: float = 0.0
     prefix_population: int = 4
     prefix_cache: bool = False
+    #: speculative-decoding depth action axis (docs/ARCHITECTURE.md §5):
+    #: per-iteration draft depth k (0 = plain autoregressive decode); the
+    #: default single level keeps the (b, m_c, tb) action space unchanged
+    spec_depths: Tuple[int, ...] = (0,)
+    #: simulator twin: probability each draft token is accepted (the
+    #: per-draft Bernoulli of the acceptance-dependent step cost model)
+    spec_accept_rate: float = 0.6
 
     def __post_init__(self):
         assert self.exec_mode in ("round", "continuous"), self.exec_mode
@@ -223,11 +230,14 @@ class ServingConfig:
         assert self.prefill_tokens_mean >= 0.0, self.prefill_tokens_mean
         assert self.shared_prefix_tokens >= 0.0, self.shared_prefix_tokens
         assert self.prefix_population >= 1, self.prefix_population
+        assert self.spec_depths, "need at least one speculation depth"
+        assert all(k >= 0 for k in self.spec_depths), self.spec_depths
+        assert 0.0 <= self.spec_accept_rate <= 1.0, self.spec_accept_rate
 
     @property
     def n_actions(self) -> int:
         return len(self.batch_sizes) * len(self.concurrency_levels) * \
-            len(self.token_budgets)
+            len(self.token_budgets) * len(self.spec_depths)
 
     def action_to_pair(self, a: int) -> Tuple[int, int]:
         nb = len(self.batch_sizes)
@@ -242,8 +252,12 @@ class ServingConfig:
             self.batch_sizes.index(b)
 
     def action_to_triple(self, a: int) -> Tuple[int, int, int]:
-        """(b, m_c, token_budget) — token budget 0 means uncapped."""
+        """(b, m_c, token_budget) — token budget 0 means uncapped. The
+        modulus folds away any outer (speculation-depth) axis, keeping
+        the narrower codec stable for pre-k callers."""
         nb, nm = len(self.batch_sizes), len(self.concurrency_levels)
+        nt = len(self.token_budgets)
+        a = a % (nb * nm * nt)
         b, m_c = self.action_to_pair(a)
         return b, m_c, self.token_budgets[a // (nb * nm)]
 
@@ -251,3 +265,20 @@ class ServingConfig:
         nb, nm = len(self.batch_sizes), len(self.concurrency_levels)
         return self.token_budgets.index(token_budget) * nb * nm + \
             self.pair_to_action(b, m_c)
+
+    def action_to_quad(self, a: int) -> Tuple[int, int, int, int]:
+        """(b, m_c, token_budget, spec_k) — the speculation depth is the
+        OUTERMOST axis: every narrower codec (pair/triple) reads the
+        same inner digits, so trained policies and existing callers see
+        identical encodings at spec_depths=(0,)."""
+        nb, nm = len(self.batch_sizes), len(self.concurrency_levels)
+        nt = len(self.token_budgets)
+        b, m_c, tb = self.action_to_triple(a)
+        return b, m_c, tb, self.spec_depths[a // (nb * nm * nt)]
+
+    def quad_to_action(self, b: int, m_c: int, token_budget: int,
+                       spec_k: int) -> int:
+        nb, nm = len(self.batch_sizes), len(self.concurrency_levels)
+        nt = len(self.token_budgets)
+        return self.spec_depths.index(spec_k) * nb * nm * nt + \
+            self.triple_to_action(b, m_c, token_budget)

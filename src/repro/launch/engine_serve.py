@@ -38,7 +38,8 @@ from repro.core.sac import SACAgent, SACConfig
 from repro.core.utility import utility
 from repro.serving.bcedge import PoolScheduler
 from repro.serving.engine import (SEQ_BUCKETS, ContinuousBatchingEngine,
-                                  InferenceEngine, _bucket)
+                                  InferenceEngine, _bucket,
+                                  supports_speculation)
 from repro.serving.runtime import ModelInstancePool
 
 #: unique-tail length _shared_prefix_prompts appends to every prefix
@@ -145,7 +146,8 @@ def serve_continuous(arch: str = "qwen3-0.6b", duration_s: float = 20.0,
                      kv_block_budget: Optional[int] = None,
                      token_budget: Optional[int] = None,
                      prefix_cache: bool = False,
-                     shared_prefix_tokens: int = 0) -> None:
+                     shared_prefix_tokens: int = 0,
+                     spec_k: int = 0) -> None:
     """Continuous mode: arrivals are submitted into the slot engine as
     they land and join the running batch at iteration boundaries. With
     ``kv_layout="paged"``, ``kv_block_budget`` caps the engine's block
@@ -154,20 +156,29 @@ def serve_continuous(arch: str = "qwen3-0.6b", duration_s: float = 20.0,
     docs/ARCHITECTURE.md §5). ``prefix_cache`` shares full immutable
     prompt blocks across same-prefix sequences (paged only);
     ``shared_prefix_tokens`` makes the generated workload templated so
-    the cache has something to hit."""
+    the cache has something to hit. ``spec_k`` enables self-speculative
+    decoding: up to k n-gram drafts per slot verified in one forward
+    (docs/ARCHITECTURE.md §speculation); models whose cache cannot
+    rewind serve with it off."""
     cfg = get_reduced_config(arch)
+    if spec_k > 0 and not supports_speculation(cfg):
+        print(f"{cfg.name}: cache not rewindable "
+              f"(recurrent/windowed layers); serving with spec_k=0")
+        spec_k = 0
     print(f"loading reduced {cfg.name} "
           f"(d={cfg.d_model}, L={cfg.n_layers}), "
           f"{max_slots} slots, {kv_layout} KV, "
           f"token budget {token_budget or 'uncapped'}, "
-          f"prefix cache {'on' if prefix_cache else 'off'}...")
+          f"prefix cache {'on' if prefix_cache else 'off'}, "
+          f"spec_k {spec_k or 'off'}...")
     engine = ContinuousBatchingEngine(cfg, max_slots=max_slots,
                                       max_seq=_serve_max_seq(
                                           shared_prefix_tokens),
                                       kv_layout=kv_layout,
                                       kv_blocks=kv_block_budget,
                                       token_budget=token_budget,
-                                      prefix_cache=prefix_cache)
+                                      prefix_cache=prefix_cache,
+                                      spec_k=spec_k)
     rng = np.random.default_rng(0)
     draw_prompt = _shared_prefix_prompts(
         rng, cfg.vocab_size, shared_prefix_tokens) \
@@ -211,7 +222,8 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
                token_budget: Optional[int] = None,
                preemption: bool = False,
                prefix_cache: bool = False,
-               shared_prefix_tokens: int = 0
+               shared_prefix_tokens: int = 0,
+               spec_k: int = 0
                ) -> Dict[str, Dict[str, float]]:
     """Multi-model pool serve (docs/RUNTIME.md): Poisson arrivals per
     model are routed by deadline into a ``ModelInstancePool`` of live
@@ -225,6 +237,9 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
     blocks across same-prefix sequences on pageable models, with router
     prefix affinity (docs/RUNTIME.md §7); pair it with
     ``shared_prefix_tokens`` so the generated workload is templated.
+    ``spec_k`` caps self-speculative decoding and adds the proposal
+    depth as the FOURTH scheduler axis (k ∈ {0, k/2, k}; rewind-capable
+    models only, docs/ARCHITECTURE.md §speculation).
     Returns the pool's per-model report."""
     cfgs = {m: get_reduced_config(m) for m in models}
     for m, cfg in cfgs.items():
@@ -239,13 +254,16 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
                              kv_layout=kv_layout,
                              kv_block_budget=kv_block_budget,
                              preemption=preemption,
-                             prefix_cache=prefix_cache)
+                             prefix_cache=prefix_cache,
+                             spec_k=spec_k)
     per_model_mc = max(1, max_instances // max(1, len(cfgs)))
     scfg = ServingConfig(
         batch_sizes=tuple(b for b in (1, 2, 4, 8) if b <= max_slots),
         concurrency_levels=tuple(range(1, per_model_mc + 1)),
         token_budgets=(0,) if not token_budget
-        else (0, 2 * token_budget, token_budget))
+        else (0, 2 * token_budget, token_budget),
+        spec_depths=(0,) if not spec_k
+        else tuple(sorted({0, max(1, spec_k // 2), spec_k})))
     sched = PoolScheduler(pool, scfg,
                           slo_ms={m: slo_ms for m in cfgs},
                           decode_steps_mean=max_new_tokens, seed=seed)
@@ -311,7 +329,7 @@ def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
          kv_block_budget: Optional[int] = None,
          token_budget: Optional[int] = None,
          preemption: bool = False, prefix_cache: bool = False,
-         shared_prefix_tokens: float = 0.0) -> None:
+         shared_prefix_tokens: float = 0.0, spec_k: int = 0) -> None:
     if models:
         if exec_mode != "continuous":
             print("multi-model pool serving is continuous-only; "
@@ -321,21 +339,24 @@ def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
                    kv_block_budget=kv_block_budget,
                    token_budget=token_budget, preemption=preemption,
                    prefix_cache=prefix_cache,
-                   shared_prefix_tokens=int(shared_prefix_tokens))
+                   shared_prefix_tokens=int(shared_prefix_tokens),
+                   spec_k=spec_k)
     elif exec_mode == "continuous":
         serve_continuous(arch, duration_s, rps, slo_ms,
                          kv_layout=kv_layout,
                          kv_block_budget=kv_block_budget,
                          token_budget=token_budget,
                          prefix_cache=prefix_cache,
-                         shared_prefix_tokens=int(shared_prefix_tokens))
+                         shared_prefix_tokens=int(shared_prefix_tokens),
+                         spec_k=spec_k)
     else:
         if kv_layout != "dense":
             print("round mode always uses the dense per-round cache; "
                   "--kv-layout applies to continuous/pool serving")
-        if token_budget or preemption or prefix_cache:
-            print("chunked prefill / preemption / prefix caching are "
-                  "continuous-engine features; ignored in round mode")
+        if token_budget or preemption or prefix_cache or spec_k:
+            print("chunked prefill / preemption / prefix caching / "
+                  "speculation are continuous-engine features; "
+                  "ignored in round mode")
         serve_round(arch, duration_s, rps, slo_ms)
 
 

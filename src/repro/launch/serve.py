@@ -78,6 +78,13 @@ def main() -> None:
                          "one of a small population of shared prefixes "
                          "of this many tokens (the regime "
                          "--prefix-cache exploits). Default: 0 (off)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative decoding depth: propose up "
+                         "to k n-gram draft tokens per slot and verify "
+                         "them in one forward (docs/ARCHITECTURE.md "
+                         "§speculation); engine/pool: cap + fourth "
+                         "scheduler axis; simulator: adds an action "
+                         "level. Continuous-only. Default: 0 (off)")
     args = ap.parse_args()
 
     if args.models and not args.engine:
@@ -98,7 +105,8 @@ def main() -> None:
                           token_budget=args.token_budget,
                           preemption=args.preemption,
                           prefix_cache=args.prefix_cache,
-                          shared_prefix_tokens=args.shared_prefix_tokens)
+                          shared_prefix_tokens=args.shared_prefix_tokens,
+                          spec_k=max(0, args.spec_k))
         return
 
     from repro.config.base import ServingConfig
@@ -119,7 +127,9 @@ def main() -> None:
                         preemption=args.preemption,
                         shared_prefix_tokens=max(
                             0.0, args.shared_prefix_tokens),
-                        prefix_cache=args.prefix_cache)
+                        prefix_cache=args.prefix_cache,
+                        spec_depths=(0,) if args.spec_k <= 0
+                        else (0, args.spec_k))
     env0 = EdgeServingEnv(cfg, episode_ms=1.0)
     agent = SACAgent(state_dim(env0.models), cfg.n_actions,
                      SACConfig(batch_size=256, lr=5e-4))

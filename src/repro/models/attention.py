@@ -225,6 +225,58 @@ def attention_decode_paged(p: Dict, x: jax.Array, cache: Dict,
     return out.reshape(B, 1, -1) @ p["wo"], cache
 
 
+def _write_paged_chunk(pool: jax.Array, new: jax.Array, tables: jax.Array,
+                       pos: jax.Array) -> jax.Array:
+    """pool (N,bs,KV,hd); new (B,T,KV,hd); tables (B,nb); pos (B,).
+
+    Multi-row counterpart of :func:`_write_paged`: row ``j`` of each
+    sequence's chunk lands in ``tables[b, (pos+j)//bs] * bs +
+    (pos+j) % bs``. Table columns past a sequence's allocated blocks are
+    the null block, so out-of-range rows (speculative drafts past a
+    slot's participation depth, inactive batch rows) collide harmlessly
+    there; callers must pad ``tables`` wide enough that ``(pos+T-1)//bs``
+    never clips into a LIVE column (JAX clamps out-of-bounds gathers)."""
+    N, bs = pool.shape[0], pool.shape[1]
+    B, T = new.shape[0], new.shape[1]
+    flat = pool.reshape((N * bs,) + pool.shape[2:])
+    p = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]  # (B,T)
+    blk = jnp.take_along_axis(tables, p // bs, axis=1)
+    phys = (blk * bs + p % bs).reshape(-1)
+    flat = flat.at[phys].set(new.reshape((B * T,) + new.shape[2:]))
+    return flat.reshape(pool.shape)
+
+
+def attention_chunk_paged(p: Dict, x: jax.Array, cache: Dict,
+                          tables: jax.Array, pos: jax.Array,
+                          cfg: ModelConfig, *, impl: str = "auto"
+                          ) -> Tuple[jax.Array, Dict]:
+    """Speculative-verification chunk over the paged layout
+    (docs/ARCHITECTURE.md §5): score ``T`` candidate tokens ``x`` (B,T,d)
+    at positions ``pos..pos+T-1`` in one forward. The chunk's K/V is
+    scattered through the block table FIRST, then each query attends the
+    gathered logical view under the causal mask ``slot <= pos+j`` —
+    exactly the positions sequential decode of token ``j`` would attend,
+    so the logits at column ``j`` match :func:`attention_decode_paged`
+    token for token. Rows for later-rejected candidates stay in the pool
+    as garbage but are never attended before being overwritten (decode
+    masks ``slots <= pos``; the engine additionally frees whole rejected
+    blocks back to its allocator)."""
+    B, T, _ = x.shape
+    nb = tables.shape[1]
+    bs = cache["k"].shape[1]
+    q_pos = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    q, k_new, v_new = _project_qkv(p, x, cfg, q_pos)
+    cache = {"k": _write_paged_chunk(cache["k"], k_new, tables, pos),
+             "v": _write_paged_chunk(cache["v"], v_new, tables, pos)}
+    k = cache["k"][tables].reshape((B, nb * bs) + cache["k"].shape[2:])
+    v = cache["v"][tables].reshape((B, nb * bs) + cache["v"].shape[2:])
+    mask = jnp.arange(nb * bs, dtype=jnp.int32)[None, None, :] \
+        <= q_pos[:, :, None]
+    scale = 1.0 / float(cfg.head_dim) ** 0.5
+    out = _sdpa(q, k, v, mask, scale)
+    return out.reshape(B, T, -1) @ p["wo"], cache
+
+
 def _write_chunk_linear(cache: jax.Array, new: jax.Array,
                         pos: jax.Array) -> jax.Array:
     """cache (B,C,KV,hd), new (B,T,KV,hd), pos (B,) -> rows pos..pos+T-1

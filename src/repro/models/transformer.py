@@ -206,9 +206,17 @@ def _layer_chunk(p: Dict, x: jax.Array, cfg: ModelConfig, kind: str,
         new_cache = new_state
     else:
         h = apply_norm(p["attn_norm"], x, cfg.norm)
-        out, kv = attn.attention_prefill_chunk(
-            p["attn"], h, {"k": cache["k"], "v": cache["v"]}, ctx["pos"],
-            cfg, window=window, impl=ctx["attn_impl"])
+        tables = ctx.get("block_tables")
+        if tables is not None and window is None:
+            # paged layout covers linear KV layers only (same gate as
+            # _layer_decode) — used by the speculative verify forward
+            out, kv = attn.attention_chunk_paged(
+                p["attn"], h, {"k": cache["k"], "v": cache["v"]}, tables,
+                ctx["pos"], cfg, impl=ctx["attn_impl"])
+        else:
+            out, kv = attn.attention_prefill_chunk(
+                p["attn"], h, {"k": cache["k"], "v": cache["v"]},
+                ctx["pos"], cfg, window=window, impl=ctx["attn_impl"])
         x = x + out
         new_cache = dict(kv)
     h = apply_norm(p["ffn_norm"], x, cfg.norm)
@@ -700,6 +708,35 @@ class Model:
         ctx = {"pos": batch["pos"], "attn_impl": self.attn_impl}
         x, new_cache = _trunk_chunk(params, x, cfg, cache, ctx)
         logits = _lm_logits(params, x[:, -1:, :], cfg)
+        return logits, new_cache
+
+    # ---- forward: speculative verification -------------------------------
+    def verify_step(self, params, cache, batch):
+        """Speculative-decoding verification forward
+        (docs/ARCHITECTURE.md §5): ``batch = {"tokens": (B,W), "pos":
+        (B,)}`` plus, for paged caches, ``"block_tables": (B, nb)``
+        scores W candidate tokens per sequence in ONE forward — the
+        logits at column ``j`` are exactly what sequential
+        :meth:`decode_step` of ``tokens[:, j]`` at position ``pos + j``
+        would produce — and writes their K/V rows. Returns
+        (all-position logits (B,W,V), cache).
+
+        The engine is responsible for masking / rolling back the rows of
+        rejected candidates; that is only sound for rewindable caches
+        (linear-attention KV), so callers gate on
+        ``serving.engine.supports_speculation``. Paged callers must also
+        pad ``block_tables`` with null-block columns so rows past
+        ``cache_len`` cannot clip into live blocks."""
+        cfg = self.cfg
+        if cfg.enc_dec or cfg.frontend is not None:
+            raise NotImplementedError(
+                "verify_step supports plain token prompts only")
+        params = self._cast(params)
+        x = apply_embed(params["embed"], batch["tokens"])
+        ctx = {"pos": batch["pos"], "attn_impl": self.attn_impl,
+               "block_tables": batch.get("block_tables")}
+        x, new_cache = _trunk_chunk(params, x, cfg, cache, ctx)
+        logits = _lm_logits(params, x, cfg)
         return logits, new_cache
 
     # ---- forward: decode -----------------------------------------------

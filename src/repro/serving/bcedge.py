@@ -189,8 +189,9 @@ def run_episode(env: EdgeServingEnv, agent,
 #:  log1p(predicted iter ms), log1p(Eq.-1 slot ms),
 #:  KV budget headroom frac (1.0 for dense/unlimited pools),
 #:  log1p(prefill backlog tokens), log1p(preemptions since last decision),
-#:  prefix-cache hit rate (0.0 for dense / cache-off pools)]
-POOL_STATE_DIM = 10
+#:  prefix-cache hit rate (0.0 for dense / cache-off pools),
+#:  speculative acceptance rate (0.0 for spec-off pools)]
+POOL_STATE_DIM = 11
 
 
 class PoolScheduler:
@@ -275,6 +276,7 @@ class PoolScheduler:
             np.log1p(max(0, p.prefill_backlog_tokens(model))),
             np.log1p(max(0, new_preempts)),
             float(occ.get("prefix_hit_rate", 0.0)),
+            min(1.0, max(0.0, float(p.spec_accept_rate()))),
         ], np.float32)
 
     def _kv_feasible(self, model: str, b: int, m_c: int) -> bool:
@@ -315,7 +317,7 @@ class PoolScheduler:
         return max(slack, 2.0) / self.decode_steps_mean
 
     def _feasible(self, model: str, b: int, m_c: int,
-                  token_budget: int = 0) -> bool:
+                  token_budget: int = 0, spec_k: int = 0) -> bool:
         """Eq.-1 feasibility per iteration at the PROPOSED overlap: the
         calibrated contention model's predicted pool-iteration latency
         must fit the most urgent request's per-iteration budget. The
@@ -329,7 +331,14 @@ class PoolScheduler:
         token-cost fit (docs/RUNTIME.md §8): one iteration doing
         ``token_budget`` tokens of prefill+decode work must also fit the
         per-iteration budget — this is what makes the Eq.-1 guard REAL
-        for long-prompt admissions instead of advisory."""
+        for long-prompt admissions instead of advisory.
+
+        A nonzero ``spec_k`` adds the verify-forward surcharge: every
+        decoding slot processes ``1 + k`` tokens per iteration instead
+        of one, so ``k * b`` extra tokens are priced through the same
+        token-cost fit. With no explicit token budget the decode floor
+        is ``b`` tokens (one per slot), so the priced work is
+        ``b + k * b``."""
         if not self._kv_feasible(model, b, m_c):
             return False
         budget = self._iter_budget_ms(model)
@@ -340,22 +349,25 @@ class PoolScheduler:
             if lm.predicted_iter_ms(t1, c, max(1, busy_others + m_c)) \
                     > budget:
                 return False
-        if token_budget > 0:
+        work = token_budget
+        if spec_k > 0:
+            work = (token_budget if token_budget > 0 else b) + spec_k * b
+        if work > 0:
             base, per_tok = self.pool.token_cost()
             if per_tok > 0.0 and lm.predicted_token_iter_ms(
-                    base, per_tok, token_budget) > budget:
+                    base, per_tok, work) > budget:
                 return False
         return True
 
     def _apply(self, model: str, a: int) -> int:
         cfg = self.cfg
-        b, m_c, tb = cfg.action_to_triple(a)
+        b, m_c, tb, sk = cfg.action_to_quad(a)
         # under backlog the guard steps aside (same rationale as the
         # simulator path: only throughput clears an old queue)
         slo = self.slo_ms.get(model, 1000.0)
         backlog = self.pool.oldest_slack_ms(model) < 0.5 * slo
         if self.guard and not backlog and \
-                not self._feasible(model, b, m_c, tb):
+                not self._feasible(model, b, m_c, tb, sk):
             self.guard_interventions += 1
             bs_levels = list(cfg.batch_sizes)
             ms = list(cfg.concurrency_levels)
@@ -364,24 +376,35 @@ class PoolScheduler:
             tbs = sorted(cfg.token_budgets,
                          key=lambda t: float("inf") if t == 0 else t,
                          reverse=True)
-            bi, mi, ti = bs_levels.index(b), ms.index(m_c), tbs.index(tb)
-            # degrade the token budget first (a tighter cap bounds the
-            # iteration without shedding capacity), then concurrency (it
-            # both contends and multiplies KV residency), then batch
-            while ti < len(tbs) - 1 or mi > 0 or bi > 0:
-                if ti < len(tbs) - 1:
+            # speculation depths ordered deepest→shallowest: walking
+            # forward sheds the verify surcharge until k collapses to 0
+            ks = sorted(cfg.spec_depths, reverse=True)
+            bi, mi = bs_levels.index(b), ms.index(m_c)
+            ti, ki = tbs.index(tb), ks.index(sk)
+            # degrade speculation first (it is pure surcharge — k*b
+            # extra verify tokens — and dropping it never sheds
+            # capacity), then the token budget (a tighter cap bounds
+            # the iteration), then concurrency (it both contends and
+            # multiplies KV residency), then batch
+            while ki < len(ks) - 1 or ti < len(tbs) - 1 \
+                    or mi > 0 or bi > 0:
+                if ki < len(ks) - 1:
+                    ki += 1
+                elif ti < len(tbs) - 1:
                     ti += 1
                 elif mi > 0:
                     mi -= 1
                 else:
                     bi -= 1
-                if self._feasible(model, bs_levels[bi], ms[mi], tbs[ti]):
+                if self._feasible(model, bs_levels[bi], ms[mi],
+                                  tbs[ti], ks[ki]):
                     break
-            b, m_c, tb = bs_levels[bi], ms[mi], tbs[ti]
+            b, m_c, tb, sk = bs_levels[bi], ms[mi], tbs[ti], ks[ki]
         self.pool.set_slot_cap(model, b)
         self.pool.scale_to(model, m_c)
         self.pool.set_token_budget(model, tb or None)
-        return cfg.triple_to_action(b, m_c, tb)
+        self.pool.set_spec_k(model, sk)
+        return cfg.quad_to_action(b, m_c, tb, sk)
 
     # ---- decision epoch --------------------------------------------------
     def control(self) -> Dict[str, tuple]:

@@ -66,6 +66,34 @@ def supports_prefix_cache(cfg: ModelConfig) -> bool:
         return False
     return all(paged_layer_kind(cfg, k) for k in cfg.layer_kinds())
 
+def supports_speculation(cfg: ModelConfig) -> bool:
+    """Speculative decoding needs every layer's decode state to be
+    REWINDABLE: rejected linear-attention KV rows are masked by ``pos``
+    (dense) or freed back to the allocator at block granularity (paged),
+    but a recurrent state advances irreversibly per token and a windowed
+    ring buffer aliases rejected writes over live positions — neither
+    can be rolled back. That is the same layer predicate prefix caching
+    needs (all decode state in plain linear KV), so the gates coincide;
+    frontend/enc-dec models additionally bypass the chunked forward the
+    verify pass is built on."""
+    return supports_prefix_cache(cfg)
+
+
+def sample_tokens(logits, greedy: bool = True, seed: int = 0) -> np.ndarray:
+    """Sample next tokens from ``logits`` (..., V) over the trailing
+    vocabulary axis: argmax when ``greedy`` (the deterministic path every
+    engine's token-identity guarantee rests on), else a seeded
+    categorical draw. Accepts (V,), (B, V) or (B, W, V) — the single
+    sampling site shared by round decode, admission, chunked-prefill
+    completion, continuous decode and speculative verification. Returns
+    an int32 ndarray shaped ``logits.shape[:-1]``."""
+    if greedy:
+        return np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+    key = jax.random.PRNGKey(seed)
+    return np.asarray(
+        jax.random.categorical(key, jnp.asarray(logits)).astype(jnp.int32))
+
+
 #: largest chunked-prefill piece; pieces are powers of two up to this, so
 #: the chunk compile cache is bounded at one shape per piece size
 _MAX_CHUNK = 512
@@ -144,13 +172,13 @@ class InferenceEngine:
         pos = jnp.full((B,), F + S, jnp.int32)
         out = np.zeros((B, max_new_tokens), np.int32)
         rng = jax.random.PRNGKey(seed)
-        tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+        tok = jnp.asarray(sample_tokens(logits[:, -1, :]))
         for t in range(max_new_tokens):
             out[:, t] = np.asarray(tok)
             logits, cache = self._decode(
                 self.params, cache, {"tokens": tok[:, None], "pos": pos})
             if greedy:
-                tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+                tok = jnp.asarray(sample_tokens(logits[:, -1, :]))
             else:
                 rng, k = jax.random.split(rng)
                 tok = jax.random.categorical(k, logits[:, -1, :]).astype(
@@ -161,6 +189,64 @@ class InferenceEngine:
         return GenerationResult(out[: len(prompts)],
                                 (t1 - t0) * 1e3, (t2 - t1) * 1e3,
                                 (t2 - t0) * 1e3)
+
+
+# =====================================================================
+# speculative proposers (docs/ARCHITECTURE.md §5)
+# =====================================================================
+class NGramProposer:
+    """Self-speculative (prompt-lookup) drafting: find the most recent
+    earlier occurrence of the context's trailing n-gram and propose the
+    tokens that followed it, falling back to shorter n-grams and finally
+    to repeating the last token. Pure host-side lookup — no extra model
+    forward — so a wrong draft costs only the verify lane it rode in;
+    the verification pass makes proposal quality a throughput knob,
+    never a correctness one."""
+
+    def __init__(self, n: int = 2):
+        self.n = max(1, n)
+
+    def propose(self, context: np.ndarray, k: int) -> np.ndarray:
+        """``context`` (1-D int32, prompt + emitted + pending) -> (k,)
+        draft tokens continuing it."""
+        ctx = np.asarray(context, np.int32)
+        L = len(ctx)
+        cont = None
+        for n in range(min(self.n, L - 1), 0, -1):
+            tail = ctx[L - n:]
+            for i in range(L - n - 1, -1, -1):
+                if np.array_equal(ctx[i:i + n], tail):
+                    cont = ctx[i + n:i + n + k]
+                    break
+            if cont is not None and len(cont):
+                break
+        if cont is None or len(cont) == 0:
+            cont = ctx[L - 1:] if L else np.zeros(1, np.int32)
+        reps = -(-k // len(cont))
+        return np.tile(cont, reps)[:k].astype(np.int32)
+
+
+class DraftModelProposer:
+    """Draft-model proposal: a small model greedily decodes ``k`` tokens
+    from the (tail of the) full context, re-prefilled per call.
+    Stateless by design — keeping a draft KV cache consistent across
+    preemption, prefix sharing and rollback would mirror the entire
+    target engine's bookkeeping for a heuristic whose only job is
+    guessing; re-prefilling a bounded context window keeps the proposer
+    trivially correct under every schedule. Verification guarantees
+    output identity regardless of what the draft proposes."""
+
+    def __init__(self, cfg: ModelConfig, seed: int = 0,
+                 context_window: int = 256):
+        self.engine = InferenceEngine(cfg, max_seq=1024, seed=seed)
+        self.context_window = context_window
+
+    def propose(self, context: np.ndarray, k: int) -> np.ndarray:
+        ctx = np.asarray(context, np.int32)[-self.context_window:]
+        if len(ctx) == 0:
+            return np.zeros(k, np.int32)
+        res = self.engine.generate([ctx], max_new_tokens=k)
+        return res.tokens[0].astype(np.int32)
 
 
 # =====================================================================
@@ -379,6 +465,11 @@ class _Slot:
     requested_new: int = 0      # caller-requested max_new (pre-clamp)
     truncated: bool = False
     n_preempted: int = 0
+    # speculative decoding: drafts proposed / accepted for this sequence
+    # since (re-)admission — preemption recomputes, so these reset with
+    # the slot; the engine-level counters stay monotonic
+    n_spec_proposed: int = 0
+    n_spec_accepted: int = 0
 
     @property
     def active(self) -> bool:
@@ -437,6 +528,10 @@ class ContinuousResult:
     truncated: bool = False
     #: times this sequence was preempted and recomputed
     n_preempted: int = 0
+    #: speculative drafts proposed / accepted while this sequence was
+    #: resident (since the last re-admission, if it was preempted)
+    n_spec_proposed: int = 0
+    n_spec_accepted: int = 0
 
     @property
     def queue_wait_s(self) -> float:
@@ -475,7 +570,9 @@ class ContinuousBatchingEngine:
                  kv_layout: str = "dense", block_size: int = 16,
                  kv_blocks: int = None,
                  token_budget: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 spec_k: int = 0, spec_ngram: int = 2,
+                 proposer=None):
         if cfg.enc_dec:
             # cross-attention K/V is unmasked (_cross_core attends every
             # encoder row), so grafting a shorter prefilled ck/cv into the
@@ -513,6 +610,27 @@ class ContinuousBatchingEngine:
                     "recurrent/windowed/frontend layers keep per-slot "
                     "dense state the cache cannot share")
         self.prefix_cache = prefix_cache
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if spec_k > 0 and not supports_speculation(cfg):
+            raise ValueError(
+                f"{cfg.name}: speculative decoding needs every layer's "
+                "decode state rewindable (linear attention only); "
+                "recurrent states advance irreversibly and windowed ring "
+                "buffers alias rejected writes over live positions")
+        #: max speculation depth this engine compiled for (fixed: the
+        #: dense scratch margin and the verify block-table padding depend
+        #: on it); ``spec_k`` below is the CURRENT depth, mutable between
+        #: steps — the PoolScheduler's fourth action axis — and clamped
+        #: to ``spec_max`` at use
+        self.spec_max = spec_k
+        self.spec_k = spec_k
+        self.proposer = proposer if proposer is not None \
+            else NGramProposer(spec_ngram)
+        self.n_spec_proposed = 0
+        self.n_spec_accepted = 0
+        self.n_spec_steps = 0
+        self._spec_shapes: Set[int] = set()
         #: prefix-cache accounting (tokens; rate = hit / (hit + chunked))
         self.n_prefix_lookups = 0
         self.n_prefix_hits = 0
@@ -528,6 +646,9 @@ class ContinuousBatchingEngine:
             self._prefill = share_from._prefill
             self._prefill_chunk = share_from._prefill_chunk
             self._decode = share_from._decode
+            self._verify = getattr(share_from, "_verify", None)
+            if self._verify is None and supports_speculation(cfg):
+                self._verify = jax.jit(self.model.verify_step)
         else:
             self.model = build_model(cfg, remat=False)
             self.params = self.model.init(jax.random.PRNGKey(seed), dtype)
@@ -535,6 +656,8 @@ class ContinuousBatchingEngine:
             self._prefill_chunk = jax.jit(self.model.prefill_chunk) \
                 if self.chunked else None
             self._decode = jax.jit(self.model.decode_step)
+            self._verify = jax.jit(self.model.verify_step) \
+                if supports_speculation(cfg) else None
         if kv_layout == "paged":
             self.block_size = block_size
             self.blocks_per_slot = -(-self.cache_len // block_size)
@@ -553,8 +676,13 @@ class ContinuousBatchingEngine:
             self.block_size = 0
             self.allocator = None
             self.block_tables = None
-            self.cache = self.model.init_cache(self.n_slots, self.cache_len,
-                                               dtype)
+            # speculative verify writes up to spec_max rows past a slot's
+            # frontier before acceptance is known; dynamic_update_slice
+            # CLAMPS out-of-bounds starts (it would silently overwrite
+            # valid earlier rows), so the physical slab carries a scratch
+            # margin. cache_len stays the LOGICAL capacity everywhere.
+            self.cache = self.model.init_cache(
+                self.n_slots, self.cache_len + self.spec_max, dtype)
         self.pos = np.zeros((self.n_slots,), np.int32)
         self.pending_tok = np.zeros((self.n_slots,), np.int32)
         self.slots = [_Slot() for _ in range(self.n_slots)]
@@ -1038,8 +1166,7 @@ class ContinuousBatchingEngine:
                 submit_s=w.submit_s, admit_s=self._now(),
                 requested_new=w.requested_new, truncated=w.truncated)
         self.pos[slot] = F + S
-        self.pending_tok[slot] = int(np.asarray(
-            jnp.argmax(logits[0, -1, :], -1)))
+        self.pending_tok[slot] = int(sample_tokens(logits[0, -1, :]))
 
     # ---- chunked prefill (docs/ARCHITECTURE.md §5) -----------------------
     def _prefill_step(self, budget_left: int) -> int:
@@ -1093,8 +1220,7 @@ class ContinuousBatchingEngine:
             self._graft(s.staging, slot)
         s.staging = None
         self.pos[slot] = s.prefill_pos
-        self.pending_tok[slot] = int(np.asarray(
-            jnp.argmax(logits[0, -1, :], -1)))
+        self.pending_tok[slot] = int(sample_tokens(logits[0, -1, :]))
 
     # ---- preemption (docs/RUNTIME.md §8) ---------------------------------
     def preemption_candidates(self) -> List[Tuple[int, int, int]]:
@@ -1179,10 +1305,14 @@ class ContinuousBatchingEngine:
         n_dec = len(self.decoding_slots)
         budget = self.token_budget if self.token_budget is not None \
             else 1 << 62
-        self.last_step_tokens = self._prefill_step(max(0, budget - n_dec))
+        eff_k = self._effective_spec_k(n_dec, budget)
+        self.last_step_tokens = self._prefill_step(
+            max(0, budget - n_dec * (1 + eff_k)))
         active = self.decoding_slots
         if not active:
             return []
+        if eff_k > 0:
+            return self._step_speculative(active, eff_k)
         self.last_step_tokens += len(active)
         for i in active:
             s = self.slots[i]
@@ -1208,7 +1338,7 @@ class ContinuousBatchingEngine:
             self._decode_warm = True
             self.last_step_compiled = True
         logits, self.cache = self._decode(self.params, self.cache, batch)
-        nxt = np.asarray(jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32))
+        nxt = sample_tokens(logits[:, -1, :])
         self.n_iters += 1
         finished: List[ContinuousResult] = []
         now = self._now()
@@ -1243,6 +1373,198 @@ class ContinuousBatchingEngine:
                 self.pending_tok[i] = nxt[i]
                 self.pos[i] = self.pos[i] + 1
         return finished
+
+    # ---- speculative decoding (docs/ARCHITECTURE.md §5) ------------------
+    def _effective_spec_k(self, n_dec: int, budget: int) -> int:
+        """Speculation depth this iteration actually runs: the current
+        ``spec_k`` clamped to the compiled ``spec_max``, degraded to fit
+        ``n_dec * (1 + k)`` decode tokens inside the iteration token
+        budget (the engine-level collapse to k=0 under pressure — the
+        scheduler's guard does the same degradation proactively)."""
+        k = min(max(0, self.spec_k), self.spec_max)
+        if k and n_dec and self.token_budget is not None:
+            k = max(0, min(k, budget // n_dec - 1))
+        return k
+
+    def _step_speculative(self, active: List[int],
+                          k: int) -> List[ContinuousResult]:
+        """One speculative iteration over the decoding slots: propose up
+        to ``k`` draft tokens per slot from its own context, score the
+        pending token + drafts in ONE ``(n_slots, 1+k)`` verify forward,
+        accept the longest draft prefix matching the verify argmax, and
+        roll the KV state back over the rejected tail — dense rows are
+        masked by ``pos`` (never attended before being overwritten);
+        paged blocks are freed back to the allocator at block
+        granularity. Greedy output is token-identical to k=0 because
+        acceptance IS greedy equality: every emitted token equals the
+        argmax a sequential decode would have produced (asserted in
+        tests/test_speculative.py and fuzzed in tests/test_engine_fuzz.py).
+
+        Speculative writes start at ``pos >= prefill_len``, past every
+        shared/registered prefix block, so rollback only ever frees
+        sole-reference decode-region blocks (asserted in
+        :meth:`_trim_blocks`)."""
+        W = 1 + k
+        toks = np.zeros((self.n_slots, W), np.int32)
+        k_eff: Dict[int, int] = {}
+        for i in active:
+            s = self.slots[i]
+            # participation cap: never draft past the request's remaining
+            # tokens or the logical cache capacity (rows j > k_i of the
+            # fixed-width forward land in the null block / scratch margin
+            # and their logits are ignored)
+            ki = max(0, min(k, s.remaining - 1,
+                            self.cache_len - 1 - int(self.pos[i])))
+            k_eff[i] = ki
+            toks[i, 0] = self.pending_tok[i]
+            if ki > 0:
+                context = np.concatenate(
+                    [s.seq_tokens, np.asarray(s.tokens, np.int32),
+                     [self.pending_tok[i]]]) \
+                    if s.seq_tokens is not None \
+                    else np.asarray(s.tokens + [self.pending_tok[i]],
+                                    np.int32)
+                toks[i, 1:1 + ki] = self.proposer.propose(context, ki)
+        batch = {"tokens": jnp.asarray(toks),
+                 "pos": jnp.asarray(self.pos)}
+        if self.kv_layout == "paged":
+            # pre-allocate blocks covering each slot's deepest draft row
+            # (the admission reservation covers them: pos + k_i is within
+            # the granted footprint), then hand the forward a block table
+            # padded with null columns so rows past cache_len can never
+            # clip into a live block (JAX clamps out-of-bounds gathers)
+            bs = self.block_size
+            for i in active:
+                s = self.slots[i]
+                top = int(self.pos[i]) + k_eff[i]
+                while top >= len(s.blocks) * bs:
+                    bid = self.allocator.alloc_reserved()
+                    s.n_outstanding -= 1
+                    self.block_tables[i, len(s.blocks)] = bid
+                    s.blocks.append(bid)
+            pad = -(-self.spec_max // bs)
+            vt = np.zeros((self.n_slots, self.blocks_per_slot + pad),
+                          np.int32)
+            vt[:, :self.blocks_per_slot] = self.block_tables
+            batch["block_tables"] = jnp.asarray(vt)
+        if W not in self._spec_shapes:
+            self._spec_shapes.add(W)
+            self.last_step_compiled = True
+        logits, self.cache = self._verify(self.params, self.cache, batch)
+        nxt_all = sample_tokens(logits)  # (n_slots, W) verify argmax
+        self.n_iters += 1
+        self.n_spec_steps += 1
+        finished: List[ContinuousResult] = []
+        now = self._now()
+        for i in active:
+            s = self.slots[i]
+            ki = k_eff[i]
+            a = 0
+            while a < ki and toks[i, a + 1] == nxt_all[i, a]:
+                a += 1
+            self.n_spec_proposed += ki
+            self.n_spec_accepted += a
+            s.n_spec_proposed += ki
+            s.n_spec_accepted += a
+            self.last_step_tokens += 1 + ki
+            # emit the pending token plus the accepted drafts
+            s.tokens.extend(int(t) for t in toks[i, :a + 1])
+            s.n_emitted += a + 1
+            s.remaining -= a + 1
+            new_pos = int(self.pos[i]) + a + 1
+            if self.kv_layout == "paged":
+                self._trim_blocks(i, new_pos)
+            if new_pos >= self.cache_len and s.remaining > 0:
+                s.truncated = True
+                s.remaining = 0
+            if s.remaining <= 0:
+                emitted = s.tokens
+                if s.seq_tokens is not None \
+                        and s.base_len < len(s.seq_tokens):
+                    emitted = list(s.seq_tokens[s.base_len:]) + s.tokens
+                finished.append(ContinuousResult(
+                    s.request_id, np.asarray(emitted, np.int32),
+                    submit_s=s.submit_s, admit_s=s.admit_s, finish_s=now,
+                    n_iters=len(emitted), truncated=s.truncated,
+                    n_preempted=s.n_preempted,
+                    n_spec_proposed=s.n_spec_proposed,
+                    n_spec_accepted=s.n_spec_accepted))
+                if self.kv_layout == "paged":
+                    self.allocator.free(s.blocks)
+                    self.allocator.unreserve(s.n_outstanding)
+                    self.block_tables[i, :] = 0
+                    self.pos[i] = 0
+                self.slots[i] = _Slot()
+                self.n_evicted += 1
+            else:
+                # the model's next token after the accepted prefix — what
+                # sequential decode would have produced as the new pending
+                self.pending_tok[i] = nxt_all[i, a]
+                self.pos[i] = new_pos
+        return finished
+
+    def _trim_blocks(self, slot: int, pos: int) -> None:
+        """Block-granular KV rollback: free the trailing blocks past the
+        last committed row ``pos - 1`` back to the allocator and restore
+        the admission reservation, leaving the slot's block list exactly
+        what an unspeculated decode at ``pos`` would hold (the
+        alloc-on-decode-boundary loop re-claims them as the frontier
+        advances). Only sole-reference decode-region blocks are ever
+        trimmed: shared and registered prefix blocks cover rows below
+        the prefill length, and ``pos`` never rolls back past it."""
+        s = self.slots[slot]
+        keep = self.allocator.blocks_for(pos)
+        if keep >= len(s.blocks):
+            return
+        drop = s.blocks[keep:]
+        for b in drop:
+            assert self.allocator.refcount(b) == 1, \
+                f"rollback would free block {b} with refcount " \
+                f"{self.allocator.refcount(b)}"
+        del s.blocks[keep:]
+        self.block_tables[slot, keep:keep + len(drop)] = 0
+        self.allocator.free(drop)
+        ok = self.allocator.reserve(len(drop))
+        assert ok, "re-reserving just-freed blocks cannot fail"
+        s.n_outstanding += len(drop)
+
+    def rollback(self, slot: int, n: int) -> None:
+        """Undo the last ``n`` emitted tokens of the sequence in
+        ``slot``: the committed context shrinks by ``n``, the pending
+        token becomes what it was before those emissions, and (paged)
+        the trailing KV blocks past the new frontier are freed back to
+        the allocator with the reservation restored — the primitive the
+        speculative path's rejection handling is built on, exposed for
+        the property tests (tests/test_speculative.py). Re-decoding from
+        the rolled-back state is token-identical: greedy decode is
+        deterministic, and rows at or past the new ``pos`` are never
+        attended before being overwritten."""
+        if not supports_speculation(self.cfg):
+            raise ValueError(
+                f"{self.cfg.name}: rollback needs rewindable decode "
+                "state (linear attention only)")
+        s = self.slots[slot]
+        if not s.active or s.prefilling:
+            raise ValueError(f"slot {slot} is not decoding")
+        if not 1 <= n <= len(s.tokens):
+            raise ValueError(
+                f"can roll back 1..{len(s.tokens)} tokens, got {n}")
+        new_pos = int(self.pos[slot]) - n
+        self.pending_tok[slot] = s.tokens[-n]
+        del s.tokens[-n:]
+        s.n_emitted -= n
+        s.remaining += n
+        self.pos[slot] = new_pos
+        if self.kv_layout == "paged":
+            self._trim_blocks(slot, new_pos)
+
+    @property
+    def spec_accept_rate(self) -> float:
+        """Draft tokens accepted as a fraction of drafts proposed over
+        the engine's lifetime — the scheduler's acceptance feature (0.0
+        before any speculative step)."""
+        return self.n_spec_accepted / self.n_spec_proposed \
+            if self.n_spec_proposed else 0.0
 
     def run(self, prompts: List[np.ndarray], max_new_tokens: int = 8,
             max_iters: int = 10_000) -> List[ContinuousResult]:
@@ -1366,4 +1688,9 @@ class ContinuousBatchingEngine:
             "n_preempted": float(self.n_preempted),
             "prefill_backlog_tokens": float(self.prefill_backlog_tokens),
             "token_budget": float(self.token_budget or 0),
+            "spec_k": float(min(max(0, self.spec_k), self.spec_max)),
+            "spec_accept_rate": self.spec_accept_rate,
+            "n_spec_proposed": float(self.n_spec_proposed),
+            "n_spec_accepted": float(self.n_spec_accepted),
+            "n_spec_steps": float(self.n_spec_steps),
         }

@@ -51,7 +51,8 @@ from repro.core.interference import engine_features
 from repro.core.utility import utility
 from repro.serving import latency_model as lm
 from repro.serving.engine import (ContinuousBatchingEngine,
-                                  PreemptedRequest, supports_prefix_cache)
+                                  PreemptedRequest, supports_prefix_cache,
+                                  supports_speculation)
 
 # instance lifecycle states (docs/RUNTIME.md state machine)
 STARTING = "starting"
@@ -167,7 +168,8 @@ class ModelInstancePool:
                  preempt_cooldown_steps: int = 8,
                  max_preemptions: int = 2,
                  token_budget: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 spec_k: int = 0):
         self.configs = dict(configs)
         self.max_instances = max_instances
         self.max_slots = max_slots
@@ -189,6 +191,15 @@ class ModelInstancePool:
         #: cannot page every decode state (recurrent/windowed/frontend)
         #: silently serve without it — per-model capability, one flag.
         self.prefix_cache = prefix_cache and kv_layout == "paged"
+        #: speculative decoding (docs/ARCHITECTURE.md §speculation): the
+        #: construction-time CAP on the proposal depth — engines are
+        #: built with scratch capacity for ``spec_cap`` draft tokens and
+        #: the scheduler's fourth axis (``set_spec_k``) moves the LIVE
+        #: depth anywhere in [0, spec_cap] without respawning. Models
+        #: whose cache cannot rewind (recurrent/windowed) silently serve
+        #: with k=0, mirroring the prefix-cache capability gate.
+        self.spec_cap = max(0, spec_k)
+        self.spec_ks: Dict[str, int] = {m: self.spec_cap for m in configs}
         #: target grant for a paged instance; default = dense-equivalent
         #: worst case. Sizing it from measured occupancy
         #: (``occupancy_tokens_per_seq``) is how a paged pool fits more
@@ -323,11 +334,15 @@ class ModelInstancePool:
                   "kv_blocks": grant,
                   "prefix_cache": self.prefix_cache
                   and supports_prefix_cache(self.configs[model])}
+        if self.spec_cap > 0 and supports_speculation(self.configs[model]):
+            kw["spec_k"] = self.spec_cap
         tmpl = self._templates.get(model)
         eng = ContinuousBatchingEngine(
             self.configs[model], max_slots=self.max_slots,
             max_seq=self.max_seq, seed=self.seed, share_from=tmpl,
             token_budget=self.token_budgets.get(model), **kw)
+        # spawn into the CURRENT scheduler-set depth (≤ the built cap)
+        eng.spec_k = min(self.spec_ks.get(model, 0), eng.spec_max)
         if tmpl is None:
             self._templates[model] = eng
         inst = ModelInstance(self._next_iid, model, eng, kv_blocks=grant)
@@ -385,6 +400,19 @@ class ModelInstancePool:
         for inst in self.instances[model]:
             if inst.engine is not None:
                 inst.engine.token_budget = budget
+
+    def set_spec_k(self, model: str, k: int) -> None:
+        """The fourth knob (docs/RUNTIME.md §9): per-iteration speculative
+        proposal depth, applied to every live engine of ``model`` and
+        inherited by future spawns. Clamped per-engine to the scratch
+        capacity the engine was built with (``spec_max``) — an engine
+        built without speculation clamps to 0, so the call is always
+        safe regardless of model capability."""
+        k = max(0, k)
+        self.spec_ks[model] = k
+        for inst in self.instances[model]:
+            if inst.engine is not None:
+                inst.engine.spec_k = min(k, inst.engine.spec_max)
 
     def prefill_backlog_tokens(self, model: Optional[str] = None) -> int:
         """Prompt tokens queued or mid-chunk across the live instances of
@@ -822,6 +850,16 @@ class ModelInstancePool:
                           for i in live)
         return hit / total if total else 0.0
 
+    def spec_accept_rate(self) -> float:
+        """Draft tokens accepted as a fraction of draft tokens proposed,
+        aggregated over live instances — the scheduler state feature
+        behind the k axis (docs/RUNTIME.md §9). 0.0 before any
+        speculative step (and always, for spec-off pools)."""
+        live = self.live()
+        acc = sum(getattr(i.engine, "n_spec_accepted", 0) for i in live)
+        prop = sum(getattr(i.engine, "n_spec_proposed", 0) for i in live)
+        return acc / prop if prop else 0.0
+
     def kv_shared_frac(self) -> float:
         """Fraction of live block mappings backed by a block another
         resident sequence also maps, pool-wide: 1 - distinct/logical.
@@ -908,6 +946,7 @@ class ModelInstancePool:
             "contention_c": c,
             "token_base_ms": base,
             "token_per_ms": per_tok,
+            "spec_accept_rate": self.spec_accept_rate(),
         }
         if self.kv_layout == "paged" or self.kv_block_budget:
             out.update({f"kv_{k}": v for k, v in self.kv_occupancy().items()})

@@ -74,6 +74,7 @@ class CompletedRound:
     request_utilities: Optional[List[float]] = None  # per-request Eq. 3
     n_preempted: int = 0     # preemptions during this session
     token_budget: int = 0    # per-iteration token cap (0 = uncapped)
+    spec_k: int = 0          # speculative proposal depth (0 = off)
 
     @property
     def throughput_rps(self) -> float:
@@ -92,6 +93,7 @@ class _Pending:
     state: np.ndarray
     action: int
     token_budget: int = 0    # per-iteration token cap (0 = uncapped)
+    spec_k: int = 0          # speculative proposal depth (0 = off)
 
 
 @dataclasses.dataclass
@@ -119,6 +121,7 @@ class _Session:
     features: object = None
     token_budget: int = 0    # per-iteration token cap (0 = uncapped)
     n_preempted: int = 0
+    spec_k: int = 0          # speculative proposal depth (0 = off)
 
     @property
     def capacity(self) -> int:
@@ -132,8 +135,16 @@ class _Session:
         ``iter`` event and handling it — joins/leaves only happen at
         iteration boundaries — so the event's latency prices exactly the
         work the handler then applies. Returns (total tokens,
-        per-request prefill allocation parallel to ``active``)."""
+        per-request prefill allocation parallel to ``active``).
+
+        With speculation on (``spec_k`` > 0) every decoding request
+        costs ``1 + spec_k`` tokens — the verify forward processes the
+        pending token plus k drafts — which is exactly how the real
+        engine's verify step bills the token budget. The *progress* per
+        iteration (acceptance) is drawn in ``_handle_iter``; the COST is
+        always the full proposal."""
         n_dec = sum(1 for r in self.active if r.prefill_remaining <= 0)
+        n_dec *= 1 + max(0, self.spec_k)
         cap = self.token_budget if self.token_budget > 0 else (1 << 62)
         left = max(0, cap - n_dec)
         alloc: List[int] = []
@@ -182,6 +193,14 @@ class EdgeServingEnv:
         self._seen_prefixes: Dict[str, set] = {m: set()
                                                for m in self.models}
         self.prefix_hit_tokens = 0
+        #: speculation twin (docs/ARCHITECTURE.md §speculation): decode
+        #: progress per iteration is 1 + the run of consecutive draft
+        #: acceptances, each a Bernoulli(cfg.spec_accept_rate) draw from
+        #: a dedicated stream (spec-off runs consume no draws, so their
+        #: traces are bit-identical to pre-speculation builds)
+        self._spec_rng = np.random.default_rng(self.seed + 1)
+        self.spec_proposed = 0
+        self.spec_accepted = 0
         self.queues: Dict[str, RequestQueue] = {
             m: RequestQueue(m, self.cfg.max_queue) for m in self.models}
         self._events: List[tuple] = []
@@ -335,7 +354,7 @@ class EdgeServingEnv:
         admit_window = p.b * prof.slo_ms * self.cfg.slo_scale
         sess = _Session(model, p.b, p.m_c, p.decision_ms, self.now,
                         self.now + admit_window, mem, p.state, p.action,
-                        token_budget=p.token_budget)
+                        token_budget=p.token_budget, spec_k=p.spec_k)
         sess.features = interference_features(
             self.hw.mem_gb - other_mem, 0.3 + 0.05 * other_inst,
             self._accel_util(), p.m_c, p.b, prof.gflops, own_mem)
@@ -450,7 +469,17 @@ class EdgeServingEnv:
                 r.prefill_remaining -= take
                 still.append(r)
                 continue
-            r.remaining -= 1
+            # speculative advance: 1 committed token plus the run of
+            # consecutively-accepted drafts (acceptance is prefix-based
+            # in the real engine, so the first rejection ends the run)
+            adv = 1
+            for _ in range(max(0, sess.spec_k)):
+                self.spec_proposed += 1
+                if self._spec_rng.random() >= self.cfg.spec_accept_rate:
+                    break
+                self.spec_accepted += 1
+                adv += 1
+            r.remaining -= adv
             if r.remaining <= 0:
                 r.finish_ms = self.now + t_t + lm.serialization_ms(1)
                 sess.done.append(r)
@@ -490,7 +519,8 @@ class EdgeServingEnv:
                              n_iters=sess.n_iters, queue_waits_ms=waits,
                              request_utilities=utils,
                              n_preempted=sess.n_preempted,
-                             token_budget=sess.token_budget)
+                             token_budget=sess.token_budget,
+                             spec_k=sess.spec_k)
         self._handle_complete(rnd)
 
     # ------------------------------------------------------------ decisions
@@ -562,11 +592,13 @@ class EdgeServingEnv:
     def step(self, action: int) -> Tuple[np.ndarray, float, bool, Dict]:
         model = self._focus
         state = self._observe(model)
-        b, m_c, token_budget = self.cfg.action_to_triple(action)
+        b, m_c, token_budget, spec_k = self.cfg.action_to_quad(action)
         target = b  # formation waits for one instance-batch
         budget = self.slot_budget_ms(model, b, m_c)
         p = _Pending(model, b, m_c, target, self.now, self.now + budget,
-                     state, action, token_budget=token_budget)
+                     state, action, token_budget=token_budget,
+                     spec_k=spec_k if self.cfg.exec_mode == "continuous"
+                     else 0)
         self.status[model] = PENDING
         self.pending[model] = p
         self._last_sa[model] = (state, action)

@@ -32,6 +32,39 @@ def test_action_pair_roundtrip():
         assert cfg.pair_to_action(b, mc) == a
 
 
+def test_action_quad_roundtrip():
+    cfg = ServingConfig(token_budgets=(0, 32, 8), spec_depths=(0, 2, 4))
+    assert cfg.n_actions == len(cfg.batch_sizes) * \
+        len(cfg.concurrency_levels) * 3 * 3
+    for a in range(cfg.n_actions):
+        b, mc, tb, k = cfg.action_to_quad(a)
+        assert cfg.quad_to_action(b, mc, tb, k) == a
+        # inner digits agree with every narrower codec (k is OUTERMOST)
+        assert cfg.action_to_triple(a) == (b, mc, tb)
+        assert cfg.action_to_pair(a) == (b, mc)
+
+
+def test_action_codecs_stable_without_spec_axis():
+    """At spec_depths=(0,) the quad codec is the triple codec plus k=0 —
+    pre-speculation action ids (and trained policies) are unaffected."""
+    cfg = ServingConfig(token_budgets=(0, 16))
+    assert cfg.spec_depths == (0,)
+    for a in range(cfg.n_actions):
+        b, mc, tb = cfg.action_to_triple(a)
+        assert cfg.action_to_quad(a) == (b, mc, tb, 0)
+        assert cfg.quad_to_action(b, mc, tb, 0) == \
+            cfg.triple_to_action(b, mc, tb) == a
+
+
+def test_spec_depths_validation():
+    with pytest.raises(AssertionError):
+        ServingConfig(spec_depths=())
+    with pytest.raises(AssertionError):
+        ServingConfig(spec_depths=(0, -2))
+    with pytest.raises(AssertionError):
+        ServingConfig(spec_accept_rate=1.5)
+
+
 # ---------------------------------------------------------------- SAC
 class Bandit:
     """Contextual bandit: best action = argmax ctx-dependent payoff."""

@@ -1,11 +1,12 @@
 """Randomized differential stress harness for the continuous engine
 (docs/ARCHITECTURE.md §5).
 
-Each seeded schedule interleaves submit / step / preempt-resume ops over
+Each seeded schedule interleaves submit / step / preempt-resume ops —
+plus live speculative-depth retuning on spec-capable variants — over
 a pool of mixed-length prompts with shared AND divergent prefixes,
 across engine variants (dense + paged layouts, prefix cache on/off,
-token budget on/off, tight block budgets that force LRU reclaim), and
-asserts:
+token budget on/off, tight block budgets that force LRU reclaim,
+speculative k up to 4 with mid-flight k toggling), and asserts:
 
 * after EVERY operation — allocator conservation:
   ``n_free + n_cached + n_live == n_blocks`` (disjoint id sets),
@@ -136,23 +137,40 @@ def _engine_variant(cfg, variant: int):
             cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
             share_from=_template(cfg), kv_layout="paged", block_size=8,
             token_budget=12, **kw)
-    # tight block budget + prefix cache: forces queueing on memory,
-    # LRU revivals and reclaims
-    kw = {"prefix_cache": True} if cfg.name in ("tiny", "tiny-tail") \
-        else {}
+    if variant == 3:
+        # tight block budget + prefix cache: forces queueing on memory,
+        # LRU revivals and reclaims
+        kw = {"prefix_cache": True} if cfg.name in ("tiny", "tiny-tail") \
+            else {}
+        return ContinuousBatchingEngine(
+            cfg, max_slots=4, max_seq=MAX_SEQ, seed=0,
+            share_from=_template(cfg), kv_layout="paged", block_size=8,
+            kv_blocks=14, **kw)
+    # speculative variants: propose/verify/rollback interleaved with
+    # everything above. Only rewind-capable stacks can speculate — the
+    # other layer families fall back to the plain paged variant so
+    # every seed still runs a schedule.
+    spec = {"spec_k": 4} if cfg.name in ("tiny", "tiny-tail") else {}
+    if variant == 4:
+        return ContinuousBatchingEngine(
+            cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
+            share_from=_template(cfg), kv_layout="paged", block_size=8,
+            prefix_cache=bool(spec), **spec)
+    # tight budget + speculation: block rollback under LRU reclaim
+    # pressure and budget-degraded effective k
     return ContinuousBatchingEngine(
-        cfg, max_slots=4, max_seq=MAX_SEQ, seed=0,
+        cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
         share_from=_template(cfg), kv_layout="paged", block_size=8,
-        kv_blocks=14, **kw)
+        kv_blocks=16, token_budget=12, **spec)
 
 
 def _run_schedule(cfg, seed: int) -> None:
     rng = random.Random(seed)
-    eng = _engine_variant(cfg, seed % 4)
+    eng = _engine_variant(cfg, seed % 6)
     prompts = _prompt_pool(cfg)
     expected = {}
     results = {}
-    ctx = f"cfg={cfg.name} seed={seed} variant={seed % 4}"
+    ctx = f"cfg={cfg.name} seed={seed} variant={seed % 6}"
 
     def step_engine():
         for r in eng.step():
@@ -169,8 +187,13 @@ def _run_schedule(cfg, seed: int) -> None:
                 pass  # request larger than the whole pool: rejected
             else:
                 expected[rid] = (p, mn)
-        elif roll < 0.85:
+        elif roll < 0.80:
             step_engine()
+        elif roll < 0.90 and eng.spec_max > 0:
+            # the scheduler's fourth axis mid-flight: retune the live
+            # proposal depth (speculate/verify/rollback must stay
+            # token-identical at any k, switched at any boundary)
+            eng.spec_k = rng.choice((0, 2, 4))
         else:
             cands = eng.decoding_slots
             if cands and eng.chunked:
@@ -199,8 +222,9 @@ def _run_schedule(cfg, seed: int) -> None:
 
 
 def test_fuzz_smoke_schedules():
-    """Tier-1 slice of the sweep: a handful of schedules over the dense
-    and paged+prefix-cache variants of the canonical tiny model."""
+    """Tier-1 slice of the sweep: a handful of schedules covering every
+    variant of the canonical tiny model once — including both
+    speculative variants (seeds 4, 5)."""
     for seed in range(8):
         _run_schedule(TINY, seed)
 
@@ -208,7 +232,7 @@ def test_fuzz_smoke_schedules():
 @pytest.mark.slow
 def test_fuzz_full_sweep_tiny():
     """The CI sweep: >= ENGINE_FUZZ_SCHEDULES seeded schedules (default
-    200) on the canonical model across all four engine variants."""
+    200) on the canonical model across all six engine variants."""
     for seed in range(N_SCHEDULES):
         _run_schedule(TINY, seed)
 

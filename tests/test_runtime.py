@@ -236,3 +236,100 @@ def test_pool_scheduler_drives_real_scaling():
     applied = sched.control()  # closes the transition, re-decides
     assert pool.m_c("tiny-a") == applied["tiny-a"][1]
     pool.run_until_drained()
+
+
+# ------------------------------------------------ speculation (fourth axis)
+def test_set_spec_k_applies_to_live_engines_and_spawns():
+    pool = _pool(kv_layout="paged", block_size=8, spec_k=4)
+    pool.scale_to("tiny-a", 1)
+    eng = pool.live("tiny-a")[0].engine
+    assert eng.spec_max == 4 and eng.spec_k == 4
+    pool.set_spec_k("tiny-a", 2)
+    assert eng.spec_k == 2 and pool.spec_ks["tiny-a"] == 2
+    # future spawns inherit the CURRENT depth under the built cap
+    pool.scale_to("tiny-a", 2)
+    assert all(i.engine.spec_k == 2 for i in pool.live("tiny-a"))
+    # clamped per-engine to the construction-time scratch capacity
+    pool.set_spec_k("tiny-a", 99)
+    assert all(i.engine.spec_k == 4 for i in pool.live("tiny-a"))
+
+
+def test_spec_cap_zero_pool_is_inert():
+    pool = _pool()  # dense, spec off
+    pool.scale_to("tiny-a", 1)
+    eng = pool.live("tiny-a")[0].engine
+    assert eng.spec_max == 0
+    pool.set_spec_k("tiny-a", 4)  # always safe: clamps to 0
+    assert eng.spec_k == 0
+    assert pool.spec_accept_rate() == 0.0
+    assert pool.stats()["spec_accept_rate"] == 0.0
+
+
+def test_pool_speculative_serving_matches_baseline():
+    rng = np.random.default_rng(4)
+    prompts = [_prompt(rng) for _ in range(4)]
+    base = ContinuousBatchingEngine(TINY_A, max_slots=2, max_seq=64, seed=0)
+    want = {tuple(p): base.run([p], max_new_tokens=4)[0].tokens
+            for p in prompts}
+    pool = _pool(kv_layout="paged", block_size=8, spec_k=4)
+    pool.scale_to("tiny-a", 1)
+    rids = {pool.submit("tiny-a", p, slo_ms=60_000.0, max_new_tokens=4):
+            tuple(p) for p in prompts}
+    got = {}
+    for _ in range(400):
+        for r in pool.step():
+            got[r.request_id] = r.tokens
+        if len(got) == len(rids):
+            break
+    assert len(got) == len(rids)
+    for rid, key in rids.items():
+        np.testing.assert_array_equal(got[rid], want[key])
+    assert pool.spec_accept_rate() >= 0.0
+
+
+def test_guard_degrades_spec_k_first():
+    """Infeasible k collapses toward 0 BEFORE the token budget,
+    concurrency or batch degrade: the verify surcharge is pure overhead,
+    so shedding it never costs capacity (docs/RUNTIME.md §8)."""
+    from repro.serving.bcedge import POOL_STATE_DIM
+
+    pool = _pool()
+    scfg = ServingConfig(batch_sizes=(1, 2), concurrency_levels=(1, 2),
+                         token_budgets=(0, 16), spec_depths=(0, 2, 4))
+    sched = PoolScheduler(pool, scfg, slo_ms={"tiny-a": 1000.0},
+                          decode_steps_mean=1.0, learn=False, seed=0)
+    # calibrated token cost: 200ms/token makes any k > 0 overshoot the
+    # 1000ms iteration budget at b=2 (work = b + k*b >= 6 tokens) while
+    # k=0 with tb=0 prices nothing
+    pool.token_cost = lambda: (0.0, 200.0)
+    a = scfg.quad_to_action(2, 1, 0, 4)
+    applied = sched._apply("tiny-a", a)
+    b, m_c, tb, k = scfg.action_to_quad(applied)
+    assert (b, m_c, tb, k) == (2, 1, 0, 0), (b, m_c, tb, k)
+    assert sched.guard_interventions == 1
+    assert pool.spec_ks["tiny-a"] == 0
+    # the state vector carries the acceptance feature, winsorized to [0,1]
+    pool.spec_accept_rate = lambda: 3.7
+    s = sched._state("tiny-a")
+    assert s.shape == (POOL_STATE_DIM,) == (11,)
+    assert s[10] == 1.0
+    pool.spec_accept_rate = lambda: -0.5
+    assert sched._state("tiny-a")[10] == 0.0
+
+
+def test_guard_prices_spec_k_through_token_cost():
+    """_feasible: k*b extra verify tokens ride the token-cost fit — on
+    top of the token budget when one is set, on top of the b-token
+    decode floor when not."""
+    pool = _pool()
+    scfg = ServingConfig(batch_sizes=(1, 2), concurrency_levels=(1,),
+                         token_budgets=(0, 8), spec_depths=(0, 4))
+    sched = PoolScheduler(pool, scfg, slo_ms={"tiny-a": 1000.0},
+                          decode_steps_mean=1.0, learn=False, seed=0)
+    pool.token_cost = lambda: (0.0, 50.0)  # 50ms/token, 1000ms budget
+    assert sched._feasible("tiny-a", 2, 1, 0, 0)       # nothing priced
+    assert sched._feasible("tiny-a", 2, 1, 8, 0)       # 8 tok = 400ms
+    assert sched._feasible("tiny-a", 2, 1, 0, 4)       # 2+8 tok = 500ms
+    assert sched._feasible("tiny-a", 2, 1, 8, 4)       # 8+8 tok = 800ms
+    assert not sched._feasible("tiny-a", 2, 1, 16, 4)  # 16+8 = 1200ms
+    assert not sched._feasible("tiny-a", 2, 1, 0, 16)  # 2+32 = 1700ms
