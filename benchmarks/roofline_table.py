@@ -1,5 +1,8 @@
 """docs/EXPERIMENTS.md §Roofline: render the per-(arch x shape x mesh) table
-from the dry-run JSON artifacts in experiments/dryrun*/."""
+from the dry-run JSON artifacts in experiments/dryrun*/, plus the
+analytic roofline for the fused paged-attention kernels
+(``paged_prefill_attention`` chunk prefill and
+``paged_decode_attention_splitk``) at representative serving shapes."""
 from __future__ import annotations
 
 import glob
@@ -7,6 +10,7 @@ import json
 import os
 
 from benchmarks.common import emit
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 
 V5E_HBM_GB = 16.0
 
@@ -48,13 +52,97 @@ def render_table(rows, fit_budget_gb: float = V5E_HBM_GB) -> str:
     return "\n".join(lines)
 
 
+# =====================================================================
+# fused paged-attention kernels (src/repro/kernels): analytic roofline
+# =====================================================================
+#: (label, batch, q_heads, kv_heads, head_dim, context, chunk, n_splits)
+#: — a 7B-ish server shape and a small edge shape, long and short ctx
+KERNEL_SHAPES = [
+    ("edge-short", 1, 8, 8, 64, 512, 64, 4),
+    ("edge-long", 4, 8, 8, 64, 2048, 64, 8),
+    ("7b-decode", 8, 32, 8, 128, 2048, 128, 8),
+    ("7b-batch", 16, 32, 8, 128, 1024, 128, 4),
+]
+KV_DTYPE_BYTES = 2  # bf16 pool
+
+
+def kernel_rows(shapes=KERNEL_SHAPES):
+    """Analytic roofline per kernel per shape (single chip).
+
+    * decode (split-K): FLOPs = 4*B*H*ctx*hd (QK^T + PV, 2 flops/MAC),
+      HBM = the K+V stream over the live context; the split axis divides
+      the serial KV stream across ``n_splits`` cores at the price of a
+      partial-output combine (n_splits f32 partials per (b, h)).
+    * prefill (chunk T over block tables): FLOPs = 4*B*H*T*ctx*hd, HBM =
+      one K+V stream + the chunk's own KV write. The STAGING round trip
+      this kernel replaces moved prefix KV three extra times (pool ->
+      staging gather, staging attention re-read, staging -> pool graft),
+      reported as ``staging_bytes`` for the traffic-saved column.
+    """
+    rows = []
+    for label, b, h, kv, hd, ctx, chunk, n_splits in shapes:
+        kv_stream = 2 * b * kv * ctx * hd * KV_DTYPE_BYTES
+        # ---- split-K decode
+        flops = 4.0 * b * h * ctx * hd
+        combine = b * h * hd * n_splits * 4 * 2  # write + read partials
+        serial_ms = max(flops / PEAK_FLOPS, kv_stream / HBM_BW) * 1e3
+        splitk_ms = max(flops / PEAK_FLOPS,
+                        (kv_stream / n_splits + combine) / HBM_BW) * 1e3
+        rows.append({
+            "kernel": "paged_decode_splitk", "shape": label,
+            "ctx": ctx, "flops": flops, "hbm_bytes": kv_stream + combine,
+            "intensity": flops / (kv_stream + combine),
+            "serial_ms": serial_ms, "latency_ms": splitk_ms,
+            "n_splits": n_splits, "bound": "memory"
+            if kv_stream / HBM_BW > flops / PEAK_FLOPS else "compute"})
+        # ---- fused chunk prefill
+        pflops = 4.0 * b * h * chunk * ctx * hd
+        chunk_write = 2 * b * kv * chunk * hd * KV_DTYPE_BYTES
+        fused_bytes = kv_stream + chunk_write
+        staging_bytes = fused_bytes + 3 * kv_stream  # the deleted trips
+        pf_ms = max(pflops / PEAK_FLOPS, fused_bytes / HBM_BW) * 1e3
+        rows.append({
+            "kernel": "paged_prefill", "shape": label, "ctx": ctx,
+            "flops": pflops, "hbm_bytes": fused_bytes,
+            "intensity": pflops / fused_bytes, "serial_ms": pf_ms,
+            "latency_ms": pf_ms, "n_splits": 1,
+            "staging_bytes": staging_bytes, "bound": "memory"
+            if fused_bytes / HBM_BW > pflops / PEAK_FLOPS else "compute"})
+    return rows
+
+
+def render_kernel_table(rows) -> str:
+    lines = [
+        "| kernel | shape | ctx | GFLOP | MiB | FLOP/B | bound |"
+        " latency us | vs serial | staging traffic |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        speedup = r["serial_ms"] / max(r["latency_ms"], 1e-12)
+        staging = f"{r['staging_bytes'] / 2**20:.1f} MiB" \
+            if "staging_bytes" in r else "—"
+        lines.append(
+            f"| {r['kernel']} | {r['shape']} | {r['ctx']} |"
+            f" {r['flops']/1e9:.2f} | {r['hbm_bytes']/2**20:.1f} |"
+            f" {r['intensity']:.1f} | {r['bound']} |"
+            f" {r['latency_ms']*1e3:.1f} |"
+            f" {speedup:.2f}x (K={r['n_splits']}) | {staging} |")
+    return "\n".join(lines)
+
+
 def main(fast: bool = True) -> dict:
+    krows = kernel_rows()
+    mem_bound = sum(1 for r in krows if r["bound"] == "memory")
+    emit("roofline.kernels", 0.0,
+         f"cases={len(krows)} memory_bound={mem_bound}/{len(krows)}")
+    print(render_kernel_table(krows))
+
     base = os.path.join(os.getcwd(), "experiments", "dryrun")
     rows = load_results(base)
     if not rows:
         emit("roofline.table", 0.0, "no dry-run artifacts found; run "
              "PYTHONPATH=src python -m repro.launch.dryrun --all first")
-        return {}
+        return {"kernels": krows}
     ok = [r for r in rows if r["status"] == "ok"]
     fit = sum(1 for r in ok
               if r["bytes_per_device"] / 2 ** 30 <= V5E_HBM_GB)
@@ -65,7 +153,7 @@ def main(fast: bool = True) -> dict:
          f"cases={len(rows)} ok={len(ok)} "
          f"fits_16GiB={fit}/{len(ok)} dominant={dominant}")
     print(render_table(rows))
-    return {"rows": rows}
+    return {"rows": rows, "kernels": krows}
 
 
 if __name__ == "__main__":

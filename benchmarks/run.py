@@ -32,6 +32,7 @@ MODULES = [
     "fig_preemption_chunked",
     "fig_prefix_cache",
     "fig_speculative",
+    "fig_fused_kernels",
     "roofline_table",
 ]
 

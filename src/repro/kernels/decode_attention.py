@@ -121,24 +121,29 @@ def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, 0].astype(jnp.float32)            # (1, hd)
-    k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
-    v = v_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
-    # ragged tail: logical slot j*bs + i is valid iff < seq_len[b]
-    slot = jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1) \
-        + j * block_size
-    valid = slot < len_ref[b]
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (1,bs)
-    s = jnp.where(valid, s, NEG)
+    # the serial sweep is bounded by the sequence's live block count,
+    # not the table width: blocks past the frontier are skipped entirely
+    @pl.when(j * block_size < len_ref[b])
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)            # (1, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+        # ragged tail: logical slot j*bs + i is valid iff < seq_len[b]
+        slot = jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1) \
+            + j * block_size
+        valid = slot < len_ref[b]
+        s = jnp.dot(q, k.T,
+                    preferred_element_type=jnp.float32) * scale  # (1,bs)
+        s = jnp.where(valid, s, NEG)
 
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])
-    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
-    acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
-        p, v, preferred_element_type=jnp.float32)
-    m_scr[...] = m_new
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
 
     @pl.when(j == n_blocks - 1)
     def _finalize():
@@ -146,24 +151,41 @@ def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def _dead_to_null(j, tbl, lens, b, bs):
+    """Index-map helper: physical block for logical block j of sequence
+    b, with blocks past the frontier redirected to the null block so the
+    padded tail of the table is never read (its entries may be garbage).
+    """
+    return jnp.where(j * bs < lens[b], tbl[b, j], 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "max_blocks", "interpret"))
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_tables: jax.Array,
                            seq_lens: jax.Array, scale: float, *,
+                           max_blocks: int | None = None,
                            interpret: bool = False) -> jax.Array:
     """Flash-decoding over a paged KV pool.
 
     q (B,1,H,hd); k_pool/v_pool (N, bs, KV, hd) physical blocks;
     block_tables (B, nb) int32 — logical block j of sequence b lives in
-    physical block ``block_tables[b, j]`` (unused entries may hold any
-    valid pool index; they are masked); seq_lens (B,) int32 — number of
-    valid logical slots per sequence. Returns (B,1,H,hd).
+    physical block ``block_tables[b, j]``. Entries past a sequence's
+    frontier (``j*bs >= seq_lens[b]``) are **never read**: the index map
+    redirects dead columns to the null block and ``pl.when`` skips their
+    compute, so the serial sweep is bounded by each sequence's live
+    block count rather than the table width. ``max_blocks`` (static)
+    additionally trims the grid when the caller knows a tighter bound on
+    ``max(ceil(seq_lens / bs))``. seq_lens (B,) int32 — number of valid
+    logical slots per sequence. Returns (B,1,H,hd).
     """
     B, _, H, hd = q.shape
     bs = k_pool.shape[1]
     KV = k_pool.shape[2]
     qpk = H // KV
     nb = block_tables.shape[1]
+    if max_blocks is not None:
+        nb = max(1, min(nb, max_blocks))
     qt = jnp.moveaxis(q, 2, 1)  # (B,H,1,hd)
 
     kernel = functools.partial(_paged_decode_kernel, scale=scale,
@@ -175,11 +197,13 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
             pl.BlockSpec((1, 1, 1, hd),
                          lambda b, h, j, tbl, lens: (b, h, 0, 0)),
             pl.BlockSpec((1, bs, 1, hd),
-                         lambda b, h, j, tbl, lens, _qpk=qpk:
-                         (tbl[b, j], 0, h // _qpk, 0)),
+                         lambda b, h, j, tbl, lens, _qpk=qpk, _bs=bs:
+                         (_dead_to_null(j, tbl, lens, b, _bs),
+                          0, h // _qpk, 0)),
             pl.BlockSpec((1, bs, 1, hd),
-                         lambda b, h, j, tbl, lens, _qpk=qpk:
-                         (tbl[b, j], 0, h // _qpk, 0)),
+                         lambda b, h, j, tbl, lens, _qpk=qpk, _bs=bs:
+                         (_dead_to_null(j, tbl, lens, b, _bs),
+                          0, h // _qpk, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, 1, hd),
                                lambda b, h, j, tbl, lens: (b, h, 0, 0)),
@@ -197,3 +221,138 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
       qt, k_pool, v_pool)
     return jnp.moveaxis(out, 1, 2)
+
+
+def _paged_splitk_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_ref, l_ref, m_scr, l_scr, acc_scr, *,
+                         scale: float, block_size: int,
+                         blocks_per_split: int):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    jj = pl.program_id(3)
+    j = s * blocks_per_split + jj  # logical block index
+
+    @pl.when(jj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * block_size < len_ref[b])
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)            # (1, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+        slot = jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1) \
+            + j * block_size
+        valid = slot < len_ref[b]
+        sc = jnp.dot(q, k.T,
+                     preferred_element_type=jnp.float32) * scale  # (1,bs)
+        sc = jnp.where(valid, sc, NEG)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sc - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(jj == blocks_per_split - 1)
+    def _finalize():
+        # per-split partials: UNNORMALIZED accumulator plus the split's
+        # running max / denominator; the host-side reduction combines
+        # them with a stable log-sum-exp
+        o_ref[0, 0, 0] = acc_scr[0].astype(o_ref.dtype)
+        m_ref[0, 0, 0] = m_scr[...]
+        l_ref[0, 0, 0] = l_scr[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "n_splits", "interpret"))
+def paged_decode_attention_splitk(q: jax.Array, k_pool: jax.Array,
+                                  v_pool: jax.Array,
+                                  block_tables: jax.Array,
+                                  seq_lens: jax.Array, scale: float, *,
+                                  n_splits: int = 4,
+                                  interpret: bool = False) -> jax.Array:
+    """Split-K flash-decoding over a paged KV pool.
+
+    Same contract as :func:`paged_decode_attention`, but the logical KV
+    axis is partitioned into ``n_splits`` independent grid slices, each
+    producing a partial (max, denominator, unnormalized accumulator)
+    triple; a block-wise max/sum reduction pass outside the kernel
+    rescales and merges them. On hardware the splits run in parallel, so
+    long-context decode latency drops from O(blocks) to
+    O(blocks / n_splits + n_splits). Dead blocks (past each sequence's
+    frontier) are skipped and their table entries never read; a split
+    whose every block is dead contributes weight exp(NEG - m) = 0.
+    """
+    B, _, H, hd = q.shape
+    bs = k_pool.shape[1]
+    KV = k_pool.shape[2]
+    qpk = H // KV
+    nb = block_tables.shape[1]
+    n_splits = max(1, min(n_splits, nb))
+    bps = -(-nb // n_splits)          # blocks per split
+    n_splits = -(-nb // bps)          # drop splits that would be empty
+    qt = jnp.moveaxis(q, 2, 1)  # (B,H,1,hd)
+
+    def _phys(j, tbl, lens, b, _bs=bs, _nb=nb):
+        # clamp j for the (padded) final split before the table read;
+        # dead blocks (incl. all j >= nb, whose slots are >= lens) are
+        # redirected to the null block and skipped in-kernel
+        jc = jnp.minimum(j, _nb - 1)
+        return jnp.where(j * _bs < lens[b], tbl[b, jc], 0)
+
+    kernel = functools.partial(_paged_splitk_kernel, scale=scale,
+                               block_size=bs, blocks_per_split=bps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, seq_lens
+        grid=(B, H, n_splits, bps),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda b, h, s, jj, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, s, jj, tbl, lens, _qpk=qpk, _bps=bps:
+                         (_phys(s * _bps + jj, tbl, lens, b),
+                          0, h // _qpk, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, s, jj, tbl, lens, _qpk=qpk, _bps=bps:
+                         (_phys(s * _bps + jj, tbl, lens, b),
+                          0, h // _qpk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, hd),
+                         lambda b, h, s, jj, tbl, lens: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda b, h, s, jj, tbl, lens: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda b, h, s, jj, tbl, lens: (b, h, s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+    )
+    o_p, m_p, l_p = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, n_splits, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, n_splits, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, n_splits, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      qt, k_pool, v_pool)
+
+    # reduction pass: rescale each split's partials to the global max
+    m_p, l_p = m_p[..., 0], l_p[..., 0]            # (B,H,S)
+    m_g = jnp.max(m_p, axis=-1, keepdims=True)     # (B,H,1)
+    w = jnp.exp(m_p - m_g)                         # empty split -> 0
+    l_g = jnp.maximum(jnp.sum(l_p * w, axis=-1), 1e-30)      # (B,H)
+    o = jnp.sum(o_p * w[..., None], axis=2) / l_g[..., None]  # (B,H,hd)
+    return o[:, None].astype(q.dtype)

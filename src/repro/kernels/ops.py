@@ -15,7 +15,11 @@ from repro.kernels import ref  # noqa: F401  (re-exported for tests)
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.decode_attention import (
     paged_decode_attention as _paged_decode)
+from repro.kernels.decode_attention import (
+    paged_decode_attention_splitk as _paged_decode_splitk)
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.prefill_attention import (
+    paged_prefill_attention as _paged_prefill)
 from repro.kernels.moe_matmul import moe_matmul as _moe
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv
@@ -42,9 +46,23 @@ def decode_attention(q, k, v, valid, scale: float, block_c: int = 512):
 
 
 def paged_decode_attention(q, k_pool, v_pool, block_tables, seq_lens,
-                           scale: float):
+                           scale: float, max_blocks: Optional[int] = None):
     return _paged_decode(q, k_pool, v_pool, block_tables, seq_lens, scale,
-                         interpret=_interpret())
+                         max_blocks=max_blocks, interpret=_interpret())
+
+
+def paged_decode_attention_splitk(q, k_pool, v_pool, block_tables,
+                                  seq_lens, scale: float,
+                                  n_splits: int = 4):
+    return _paged_decode_splitk(q, k_pool, v_pool, block_tables, seq_lens,
+                                scale, n_splits=n_splits,
+                                interpret=_interpret())
+
+
+def paged_prefill_attention(q, k_pool, v_pool, block_tables, pos,
+                            scale: float):
+    return _paged_prefill(q, k_pool, v_pool, block_tables, pos, scale,
+                          interpret=_interpret())
 
 
 def rwkv6_scan(r, k, v, w, u, state, chunk: int = 64):

@@ -1,0 +1,141 @@
+"""Fused chunk-prefill attention over a paged KV pool, Pallas TPU.
+
+The chunked-prefill path used to gather every logical block of a
+sequence into a dense per-slot staging cache before running attention
+(docs/ARCHITECTURE.md §5). This kernel removes that round trip: chunk
+queries attend *directly* through the block table, streaming physical
+pool blocks HBM->VMEM exactly like :mod:`repro.kernels.decode_attention`
+but with a whole query chunk resident instead of one row.
+
+Grid (batch, q_head, logical_blocks) with the KV sweep innermost and
+sequential; the online-softmax carry (running max / denominator /
+accumulator, one row per chunk query) lives in VMEM scratch. The block
+table and per-sequence lengths are scalar-prefetched so the index map
+resolves logical→physical before the DMA is issued. Three masks happen
+in-kernel:
+
+* **causal chunk suffix** — query row i sits at absolute position
+  ``pos[b] + i`` and may only see logical slots ``<= pos[b] + i``;
+* **ragged tail** — slots past ``pos[b] + T`` within the last live
+  block are excluded by the same comparison;
+* **dead blocks** — logical blocks entirely past the sequence frontier
+  are skipped via ``pl.when`` *and* their table entries are never read:
+  the index map redirects them to the null block, so padded table
+  columns may hold arbitrary garbage.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1.0e30
+
+
+def _paged_prefill_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_scr, l_scr, acc_scr, *, scale: float,
+                          block_size: int, n_blocks: int, chunk: int,
+                          t_pad: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # blocks entirely past the sequence frontier contribute nothing:
+    # skip the matmul and leave the carry untouched
+    @pl.when(j * block_size < len_ref[b])
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)        # (t_pad, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)     # (bs, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)     # (bs, hd)
+        s = jnp.dot(q, k.T,
+                    preferred_element_type=jnp.float32) * scale  # (t_pad,bs)
+        # query row i is at absolute position pos[b]+i = len[b]-chunk+i
+        # and attends logical slots <= its own position (this single
+        # comparison is both the causal mask and the ragged tail mask)
+        slot = jax.lax.broadcasted_iota(jnp.int32, (t_pad, block_size), 1) \
+            + j * block_size
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (t_pad, block_size), 0) \
+            + (len_ref[b] - chunk)
+        s = jnp.where(slot <= qpos, s, NEG)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_tables: jax.Array,
+                            pos: jax.Array, scale: float, *,
+                            interpret: bool = False) -> jax.Array:
+    """Chunk-query attention directly over a paged KV pool.
+
+    q (B,T,H,hd) — a chunk of T query rows per sequence, row i at
+    absolute position ``pos[b] + i``; k_pool/v_pool (N, bs, KV, hd)
+    physical blocks, with the chunk's own K/V already written through
+    the table; block_tables (B, nb) int32 — entries for blocks past the
+    chunk frontier are never read (they may hold arbitrary values);
+    pos (B,) int32 chunk start positions. Returns (B,T,H,hd) where row i
+    attended logical slots ``0..pos[b]+i``.
+    """
+    B, T, H, hd = q.shape
+    bs, KV = k_pool.shape[1], k_pool.shape[2]
+    qpk = H // KV
+    nb = block_tables.shape[1]
+    t_pad = -(-T // 8) * 8  # sublane-align the chunk axis
+    qt = jnp.moveaxis(q, 2, 1)  # (B,H,T,hd)
+    if t_pad != T:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, t_pad - T), (0, 0)))
+    lens = pos.astype(jnp.int32) + T  # live logical slots per sequence
+
+    kernel = functools.partial(_paged_prefill_kernel, scale=scale,
+                               block_size=bs, n_blocks=nb, chunk=T,
+                               t_pad=t_pad)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, lens
+        grid=(B, H, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, t_pad, hd),
+                         lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, tbl, lens, _qpk=qpk, _bs=bs:
+                         (jnp.where(j * _bs < lens[b], tbl[b, j], 0),
+                          0, h // _qpk, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, h, j, tbl, lens, _qpk=qpk, _bs=bs:
+                         (jnp.where(j * _bs < lens[b], tbl[b, j], 0),
+                          0, h // _qpk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, t_pad, hd),
+                               lambda b, h, j, tbl, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((t_pad,), jnp.float32),
+            pltpu.VMEM((t_pad,), jnp.float32),
+            pltpu.VMEM((t_pad, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, t_pad, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lens, qt, k_pool, v_pool)
+    return jnp.moveaxis(out[:, :, :T], 1, 2)

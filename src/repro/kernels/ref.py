@@ -62,6 +62,43 @@ def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
     return decode_attention_ref(q, k, v, valid, scale)
 
 
+def paged_prefill_attention_ref(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, block_tables: jax.Array,
+                                pos: jax.Array, scale: float) -> jax.Array:
+    """q (B,T,H,hd) chunk queries, row i at absolute position
+    ``pos[b]+i``; k/v pools (N,bs,KV,hd); block_tables (B,nb) int32;
+    pos (B,) int32 -> (B,T,H,hd). Gathers the logical view then applies
+    the shifted-causal mask ``slot <= pos + i`` (which also cuts the
+    ragged tail past the chunk frontier)."""
+    B, T, H, hd = q.shape
+    nb = block_tables.shape[1]
+    bs, KV = k_pool.shape[1], k_pool.shape[2]
+    G = H // KV
+    k = k_pool[block_tables].reshape((B, nb * bs) + k_pool.shape[2:])
+    v = v_pool[block_tables].reshape((B, nb * bs) + v_pool.shape[2:])
+    qg = q.reshape(B, T, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg,
+                        k.astype(jnp.float32)) * scale
+    slot = jnp.arange(nb * bs)[None, None, :]
+    qpos = (pos[:, None] + jnp.arange(T))[:, :, None]
+    mask = slot <= qpos                       # (B, T, nb*bs)
+    scores = jnp.where(mask[:, None, None], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
+def paged_decode_attention_splitk_ref(q: jax.Array, k_pool: jax.Array,
+                                      v_pool: jax.Array,
+                                      block_tables: jax.Array,
+                                      seq_lens: jax.Array,
+                                      scale: float) -> jax.Array:
+    """The split-K kernel partitions work, not math: its oracle is the
+    plain paged decode reference."""
+    return paged_decode_attention_ref(q, k_pool, v_pool, block_tables,
+                                      seq_lens, scale)
+
+
 def rwkv6_scan_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
                    u: jax.Array, state: jax.Array):
     """All of r/k/v/w: (B,S,H,hd) f32; u (H,hd); state (B,H,hd,hd).

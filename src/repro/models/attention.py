@@ -260,7 +260,14 @@ def attention_chunk_paged(p: Dict, x: jax.Array, cache: Dict,
     token for token. Rows for later-rejected candidates stay in the pool
     as garbage but are never attended before being overwritten (decode
     masks ``slots <= pos``; the engine additionally frees whole rejected
-    blocks back to its allocator)."""
+    blocks back to its allocator).
+
+    Also the fused chunked-prefill body: the engine's fused prefill path
+    calls this per chunk, so prefix-cache hits and chunk continuations
+    attend shared blocks directly through the table with no staging
+    gather. ``impl="kernel"`` dispatches to the fused Pallas kernel
+    (:func:`repro.kernels.ops.paged_prefill_attention`), which streams
+    physical blocks instead of gathering the logical view."""
     B, T, _ = x.shape
     nb = tables.shape[1]
     bs = cache["k"].shape[1]
@@ -268,12 +275,18 @@ def attention_chunk_paged(p: Dict, x: jax.Array, cache: Dict,
     q, k_new, v_new = _project_qkv(p, x, cfg, q_pos)
     cache = {"k": _write_paged_chunk(cache["k"], k_new, tables, pos),
              "v": _write_paged_chunk(cache["v"], v_new, tables, pos)}
-    k = cache["k"][tables].reshape((B, nb * bs) + cache["k"].shape[2:])
-    v = cache["v"][tables].reshape((B, nb * bs) + cache["v"].shape[2:])
-    mask = jnp.arange(nb * bs, dtype=jnp.int32)[None, None, :] \
-        <= q_pos[:, :, None]
     scale = 1.0 / float(cfg.head_dim) ** 0.5
-    out = _sdpa(q, k, v, mask, scale)
+    if impl == "kernel":
+        from repro.kernels import ops as kops
+
+        out = kops.paged_prefill_attention(q, cache["k"], cache["v"],
+                                           tables, pos, scale)
+    else:
+        k = cache["k"][tables].reshape((B, nb * bs) + cache["k"].shape[2:])
+        v = cache["v"][tables].reshape((B, nb * bs) + cache["v"].shape[2:])
+        mask = jnp.arange(nb * bs, dtype=jnp.int32)[None, None, :] \
+            <= q_pos[:, :, None]
+        out = _sdpa(q, k, v, mask, scale)
     return out.reshape(B, T, -1) @ p["wo"], cache
 
 

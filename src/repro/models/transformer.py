@@ -692,7 +692,11 @@ class Model:
         """Chunked-prefill continuation (docs/ARCHITECTURE.md §5):
         ``batch = {"tokens": (B,T), "pos": (B,)}`` processes T tokens
         starting at absolute position ``pos`` against a DENSE decode
-        cache previously filled up to ``pos`` (zeros on first chunk).
+        cache previously filled up to ``pos`` (zeros on first chunk) —
+        or, when ``batch["block_tables"]`` is present, directly against
+        a PAGED pool: the chunk's K/V is scattered through the table and
+        its queries attend earlier blocks in place (the engine's fused
+        prefill path, no staging gather/scatter round trip).
         Returns (last-position logits, cache). Attention attends exactly
         the positions a full prefill attends, recurrent layers run their
         sequence form from the carried state — so a prompt processed in
@@ -705,7 +709,8 @@ class Model:
                 "prefill_chunk supports plain token prompts only")
         params = self._cast(params)
         x = apply_embed(params["embed"], batch["tokens"])
-        ctx = {"pos": batch["pos"], "attn_impl": self.attn_impl}
+        ctx = {"pos": batch["pos"], "attn_impl": self.attn_impl,
+               "block_tables": batch.get("block_tables")}
         x, new_cache = _trunk_chunk(params, x, cfg, cache, ctx)
         logits = _lm_logits(params, x[:, -1:, :], cfg)
         return logits, new_cache

@@ -572,7 +572,7 @@ class ContinuousBatchingEngine:
                  token_budget: Optional[int] = None,
                  prefix_cache: bool = False,
                  spec_k: int = 0, spec_ngram: int = 2,
-                 proposer=None):
+                 proposer=None, prefill_mode: str = "auto"):
         if cfg.enc_dec:
             # cross-attention K/V is unmasked (_cross_core attends every
             # encoder row), so grafting a shorter prefilled ck/cv into the
@@ -610,6 +610,28 @@ class ContinuousBatchingEngine:
                     "recurrent/windowed/frontend layers keep per-slot "
                     "dense state the cache cannot share")
         self.prefix_cache = prefix_cache
+        #: chunked-prefill execution mode. "fused" runs every prefill
+        #: chunk DIRECTLY against the paged pool through the slot's
+        #: block table (repro.models.attention.attention_chunk_paged):
+        #: no per-slot staging cache, no prefix gather, no completion
+        #: graft scatter. "staging" keeps the legacy dense staging-cache
+        #: round trip (gather cached prefix -> chunk into staging ->
+        #: scatter-graft). "auto" picks fused whenever the layout
+        #: supports it: paged + chunked + every layer's decode state in
+        #: the block pool (the same gate as the prefix cache — a dense
+        #: per-slot leaf cannot take a batch-1 chunk against the shared
+        #: pool pytree).
+        if prefill_mode not in ("auto", "fused", "staging"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        fused_ok = (kv_layout == "paged" and self.chunked
+                    and supports_prefix_cache(cfg))
+        if prefill_mode == "fused" and not fused_ok:
+            raise ValueError(
+                "prefill_mode='fused' needs kv_layout='paged', the "
+                "chunked-prefill path, and every layer's decode state "
+                "in the block pool")
+        self.fused_prefill = fused_ok if prefill_mode == "auto" \
+            else prefill_mode == "fused"
         if spec_k < 0:
             raise ValueError(f"spec_k must be >= 0, got {spec_k}")
         if spec_k > 0 and not supports_speculation(cfg):
@@ -967,6 +989,30 @@ class ContinuousBatchingEngine:
                 for sc, fc in zip(staging["tail"], self.cache["tail"]))
         return new
 
+    def _copy_pool_block(self, dst: int, src: int) -> None:
+        """Device-copy one physical pool block across every paged layer
+        (fused-prefill copy-on-write: a fully-covering cached chain's
+        tail block is duplicated into the slot's private tail block, so
+        re-scoring its final token never writes a shared block). Every
+        layer is paged here — the fused gate mirrors
+        ``supports_prefix_cache``."""
+        def copy(c, stacked: bool):
+            out = dict(c)
+            for key in ("k", "v"):
+                pool = c[key]
+                out[key] = pool.at[:, dst].set(pool[:, src]) if stacked \
+                    else pool.at[dst].set(pool[src])
+            return out
+
+        new: Dict = {}
+        if "units" in self.cache:
+            new["units"] = tuple(copy(c, stacked=True)
+                                 for c in self.cache["units"])
+        if "tail" in self.cache:
+            new["tail"] = tuple(copy(c, stacked=False)
+                                for c in self.cache["tail"])
+        self.cache = new
+
     def _graft(self, one_cache, slot: int, block_ids=None,
                skip_blocks: int = 0) -> None:
         """Scatter a freshly-prefilled single-sequence cache into the
@@ -1095,31 +1141,51 @@ class ContinuousBatchingEngine:
                     # physically allocate the uncached prefill prefix
                     # now; the decode tail of the reservation is claimed
                     # lazily at block boundaries in step(). block_tables
-                    # stays on the null block until the graft lands.
+                    # stays on the null block until the prefill lands
+                    # (mid-prefill dummy decode writes must keep sinking
+                    # into the null block) — fused chunks carry their own
+                    # table row built from ``ids``.
                     n0 = self.allocator.blocks_for(len(seq))
                     ids += [self.allocator.alloc_reserved()
                             for _ in range(n0 - len(shared_ids))]
-                staging = self.model.init_cache(1, self.cache_len,
-                                                self.dtype)
-                if pos0:
-                    # chunked prefill skips straight to the first
-                    # uncached token: staging gets the cached prefix KV
-                    # (gather_blocks), including — copy-on-write — the
-                    # first block_size-1 rows of a fully-covering chain's
-                    # tail block, read via a transient reference
-                    fill_ids = list(shared_ids)
-                    tmp = None
-                    if cow_key is not None:
+                staging = None
+                if self.fused_prefill:
+                    # fused path: chunks attend the shared prefix blocks
+                    # IN PLACE through the table — no staging cache, no
+                    # prefix gather. A fully-covering cached chain still
+                    # copies its tail block into the slot's private tail
+                    # block (copy-on-write) so re-scoring the final
+                    # token writes only unshared blocks.
+                    if pos0 and cow_key is not None:
                         tmp = self.allocator.acquire(cow_key)
                         if tmp is None:  # LRU revival refused: shrink
                             pos0 = len(shared_ids) * self.block_size
                         else:
-                            fill_ids.append(tmp)
+                            self._copy_pool_block(ids[-1], tmp)
+                            self.allocator.free([tmp])
+                else:
+                    staging = self.model.init_cache(1, self.cache_len,
+                                                    self.dtype)
                     if pos0:
-                        staging = self._fill_staging(staging, fill_ids,
-                                                     pos0)
-                    if tmp is not None:
-                        self.allocator.free([tmp])
+                        # chunked prefill skips straight to the first
+                        # uncached token: staging gets the cached prefix
+                        # KV (gather_blocks), including — copy-on-write —
+                        # the first block_size-1 rows of a fully-covering
+                        # chain's tail block, read via a transient
+                        # reference
+                        fill_ids = list(shared_ids)
+                        tmp = None
+                        if cow_key is not None:
+                            tmp = self.allocator.acquire(cow_key)
+                            if tmp is None:  # LRU revival refused: shrink
+                                pos0 = len(shared_ids) * self.block_size
+                            else:
+                                fill_ids.append(tmp)
+                        if pos0:
+                            staging = self._fill_staging(staging, fill_ids,
+                                                         pos0)
+                        if tmp is not None:
+                            self.allocator.free([tmp])
                 if pos0:
                     self.n_prefix_hits += 1
                     self.n_prefix_hit_tokens += pos0
@@ -1173,8 +1239,16 @@ class ContinuousBatchingEngine:
         """Advance in-slot chunked prefills by at most ``budget_left``
         tokens (power-of-two chunk pieces so the compile cache stays
         bounded at one shape per piece size). Returns tokens processed.
-        A slot whose last chunk lands is grafted and joins the decode
-        batch of this same iteration."""
+        A slot whose last chunk lands is grafted (staging mode) or just
+        published (fused mode) and joins the decode batch of this same
+        iteration.
+
+        Fused mode runs each chunk directly against the paged pool: the
+        batch carries the slot's block-table row (built from its
+        allocated blocks — the engine-level table stays on the null
+        block until the prefill completes) and the chunk's K/V lands in
+        the pool as it is computed, attending shared prefix blocks in
+        place."""
         done_tokens = 0
         for i in list(self.prefilling_slots):
             s = self.slots[i]
@@ -1188,10 +1262,17 @@ class ContinuousBatchingEngine:
                 if shape not in self.prefill_shapes:
                     self.prefill_shapes.add(shape)
                     self.last_step_compiled = True
-                logits, s.staging = self._prefill_chunk(
-                    self.params, s.staging,
-                    {"tokens": jnp.asarray(toks[None, :]),
-                     "pos": jnp.asarray([s.prefill_pos], jnp.int32)})
+                batch = {"tokens": jnp.asarray(toks[None, :]),
+                         "pos": jnp.asarray([s.prefill_pos], jnp.int32)}
+                if self.fused_prefill:
+                    tbl = np.zeros((1, self.blocks_per_slot), np.int32)
+                    tbl[0, :len(s.blocks)] = s.blocks
+                    batch["block_tables"] = jnp.asarray(tbl)
+                    logits, self.cache = self._prefill_chunk(
+                        self.params, self.cache, batch)
+                else:
+                    logits, s.staging = self._prefill_chunk(
+                        self.params, s.staging, batch)
                 s.prefill_pos += c
                 budget_left -= c
                 done_tokens += c
@@ -1201,17 +1282,20 @@ class ContinuousBatchingEngine:
         return done_tokens
 
     def _finish_prefill(self, slot: int, logits) -> None:
-        """Last chunk landed: graft the staging cache into the slot (and,
-        paged, point the block table at the allocated prefix blocks —
-        skipping the shared prefix blocks, which are immutable), then
-        hand the slot to the decode loop. With the prefix cache on, the
-        now-complete full prompt blocks are published under their chain
-        keys so later same-prefix admissions can share them."""
+        """Last chunk landed: point the block table at the allocated
+        prefix blocks and hand the slot to the decode loop. In staging
+        mode the staging cache is grafted into the slot first (skipping
+        the shared prefix blocks, which are immutable); in fused mode
+        the chunks already wrote the pool through the table, so there is
+        nothing to scatter. With the prefix cache on, the now-complete
+        full prompt blocks are published under their chain keys so later
+        same-prefix admissions can share them."""
         s = self.slots[slot]
         if self.kv_layout == "paged":
             self.block_tables[slot, :len(s.blocks)] = s.blocks
-            self._graft(s.staging, slot, block_ids=s.blocks,
-                        skip_blocks=s.n_shared)
+            if not self.fused_prefill:
+                self._graft(s.staging, slot, block_ids=s.blocks,
+                            skip_blocks=s.n_shared)
             if self.prefix_cache:
                 for i, key in enumerate(self._chain_keys(s.seq_tokens)):
                     if i >= s.n_shared:
@@ -1613,9 +1697,12 @@ class ContinuousBatchingEngine:
             if not s.active:
                 continue
             if s.prefilling:
-                # pool blocks hold only the shared prefix so far; the
-                # chunked suffix lives in staging until the graft
-                c = min(s.prefill_pos, s.n_shared * bs)
+                # fused chunks write the pool directly, so every
+                # prefilled token occupies its block; in staging mode
+                # pool blocks hold only the shared prefix until the
+                # graft and the chunked suffix lives in staging
+                c = s.prefill_pos if self.fused_prefill \
+                    else min(s.prefill_pos, s.n_shared * bs)
             else:
                 c = int(self.pos[i]) + 1
             for idx, bid in enumerate(s.blocks):

@@ -80,6 +80,37 @@ def test_budgeted_engine_matches_round_engine_greedy():
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("prefill_mode", ["staging", "fused"])
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_paged_chunked_identity_staging_vs_fused(prefill_mode, prefix_cache):
+    """The fused path (chunks attend the block pool directly through
+    their table row) and the legacy staging path (side cache + graft)
+    are the SAME function: both stay token-identical to the dense round
+    engine on paged chunked prefill, with and without prefix reuse.
+    Parametrizing the flag here is the deletion gate for the staging
+    path — drop "staging" from the list, then delete the code."""
+    round_eng = InferenceEngine(TINY, max_seq=64)
+    eng = ContinuousBatchingEngine(
+        TINY, max_slots=2, max_seq=64, kv_layout="paged", block_size=8,
+        token_budget=12, prefix_cache=prefix_cache,
+        prefill_mode=prefill_mode)
+    assert eng.fused_prefill == (prefill_mode == "fused")
+    rng = np.random.default_rng(6)
+    shared = rng.integers(1, 97, 17).astype(np.int32)
+    prompts = [np.concatenate([shared,
+                               rng.integers(1, 97, n).astype(np.int32)])
+               for n in (3, 11)]
+    prompts += [rng.integers(1, 97, 5).astype(np.int32), prompts[0].copy()]
+    ref = [round_eng.generate([p], max_new_tokens=5).tokens[0]
+           for p in prompts]
+    res = eng.run(prompts, max_new_tokens=5)
+    for r, expected in zip(res, ref):
+        assert np.array_equal(r.tokens, expected)
+    if prefix_cache:
+        assert eng.n_prefix_hits >= 1
+
+
+@pytest.mark.slow
 def test_token_budget_bounds_iteration_work():
     """Every step processes at most budget tokens of prefill + the
     resident decodes; a long prompt therefore spans several iterations

@@ -6,7 +6,10 @@ plus live speculative-depth retuning on spec-capable variants — over
 a pool of mixed-length prompts with shared AND divergent prefixes,
 across engine variants (dense + paged layouts, prefix cache on/off,
 token budget on/off, tight block budgets that force LRU reclaim,
-speculative k up to 4 with mid-flight k toggling), and asserts:
+speculative k up to 4 with mid-flight k toggling — paged variants run
+the FUSED prefill path, chunks attending the pool directly through
+block tables, plus two legacy staging-mode variants so the flag-gated
+path keeps coverage until its deletion), and asserts:
 
 * after EVERY operation — allocator conservation:
   ``n_free + n_cached + n_live == n_blocks`` (disjoint id sets),
@@ -116,12 +119,24 @@ def _check_invariants(eng, ctx: str) -> None:
                 assert not eng.block_tables[i, n:].any(), ctx
             else:
                 # mid-prefill slots point at the null block until the
-                # graft lands (writes go to staging, not the pool)
+                # prefill lands, in BOTH modes: staging chunks write a
+                # side cache, and fused chunks carry their own table row
+                # — either way the decode batch's dummy writes for this
+                # row must keep sinking into the null block
                 assert not eng.block_tables[i].any(), ctx
 
 
+N_VARIANTS = 8
+
+
 def _engine_variant(cfg, variant: int):
-    """Rotate the engine configurations the schedules exercise."""
+    """Rotate the engine configurations the schedules exercise. Paged
+    variants (1-5) resolve ``prefill_mode="auto"`` to the FUSED path on
+    these all-linear configs — so the prefix-cache (2, 3) and
+    speculative (4, 5) variants prove token-identity of fused prefill
+    under preempt/resume/rollback interleavings. Variants 6-7 pin the
+    legacy staging path (prefix-cache and speculative respectively) so
+    it keeps differential coverage while it remains selectable."""
     if variant == 0:
         return ContinuousBatchingEngine(
             cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
@@ -156,21 +171,36 @@ def _engine_variant(cfg, variant: int):
             cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
             share_from=_template(cfg), kv_layout="paged", block_size=8,
             prefix_cache=bool(spec), **spec)
-    # tight budget + speculation: block rollback under LRU reclaim
-    # pressure and budget-degraded effective k
+    if variant == 5:
+        # tight budget + speculation: block rollback under LRU reclaim
+        # pressure and budget-degraded effective k
+        return ContinuousBatchingEngine(
+            cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
+            share_from=_template(cfg), kv_layout="paged", block_size=8,
+            kv_blocks=16, token_budget=12, **spec)
+    # legacy staging-mode coverage (explicit prefill_mode="staging"):
+    # the gather/graft round trip must stay token-identical too until
+    # the flag-gated path is deleted
+    if variant == 6:
+        kw = {"prefix_cache": True} \
+            if cfg.name in ("tiny", "tiny-tail") else {}
+        return ContinuousBatchingEngine(
+            cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
+            share_from=_template(cfg), kv_layout="paged", block_size=8,
+            token_budget=12, prefill_mode="staging", **kw)
     return ContinuousBatchingEngine(
         cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
         share_from=_template(cfg), kv_layout="paged", block_size=8,
-        kv_blocks=16, token_budget=12, **spec)
+        prefix_cache=bool(spec), prefill_mode="staging", **spec)
 
 
 def _run_schedule(cfg, seed: int) -> None:
     rng = random.Random(seed)
-    eng = _engine_variant(cfg, seed % 6)
+    eng = _engine_variant(cfg, seed % N_VARIANTS)
     prompts = _prompt_pool(cfg)
     expected = {}
     results = {}
-    ctx = f"cfg={cfg.name} seed={seed} variant={seed % 6}"
+    ctx = f"cfg={cfg.name} seed={seed} variant={seed % N_VARIANTS}"
 
     def step_engine():
         for r in eng.step():
@@ -224,15 +254,16 @@ def _run_schedule(cfg, seed: int) -> None:
 def test_fuzz_smoke_schedules():
     """Tier-1 slice of the sweep: a handful of schedules covering every
     variant of the canonical tiny model once — including both
-    speculative variants (seeds 4, 5)."""
-    for seed in range(8):
+    speculative variants (seeds 4, 5) and the legacy staging-mode
+    variants (seeds 6, 7)."""
+    for seed in range(N_VARIANTS):
         _run_schedule(TINY, seed)
 
 
 @pytest.mark.slow
 def test_fuzz_full_sweep_tiny():
     """The CI sweep: >= ENGINE_FUZZ_SCHEDULES seeded schedules (default
-    200) on the canonical model across all six engine variants."""
+    200) on the canonical model across all eight engine variants."""
     for seed in range(N_SCHEDULES):
         _run_schedule(TINY, seed)
 

@@ -1,0 +1,277 @@
+"""Property-based oracle tests for the fused paged-attention kernels.
+
+`paged_prefill_attention` (chunk queries over block tables) and
+`paged_decode_attention_splitk` (split-K flash-decode) vs the pure-jnp
+oracles in ``repro.kernels.ref``, across ragged seq_lens, chunk sizes,
+block sizes and null-block-padded tables, plus the degenerate
+single-block and full-capacity cases. Runs in Pallas interpreter mode on
+CPU (the ``kernels-interpret`` CI job); ``hypothesis`` falls back to the
+in-tree stub (tests/_hypothesis_stub.py) when the real library is
+missing.
+
+The NaN-poison tests pin the satellite fix to the serial sweep bound:
+table columns past a sequence's frontier are NEVER read (the index map
+redirects them to the null block), so they may hold arbitrary garbage —
+previously they were fetched and merely masked, which required them to
+stay valid pool indices.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+MAX_EXAMPLES = 20
+ATOL, RTOL = 2e-5, 2e-4
+
+
+def _pools(rng, n_pool, bs, KV, hd):
+    k = jnp.asarray(rng.standard_normal((n_pool, bs, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((n_pool, bs, KV, hd)), jnp.float32)
+    return k, v
+
+
+def _tables(rng, B, nb, n_pool):
+    """Distinct physical blocks per sequence (never the null block 0),
+    in shuffled order."""
+    perm = rng.permutation(np.arange(1, n_pool))[:B * nb]
+    return perm.reshape(B, nb).astype(np.int32)
+
+
+def _null_pad_dead(tables, live, value=0):
+    """Overwrite every table column past each sequence's live block
+    count with ``value`` (the engine null-pads; poison tests plant a
+    NaN block instead)."""
+    out = np.array(tables)
+    for b in range(out.shape[0]):
+        out[b, live[b]:] = value
+    return out
+
+
+# ---------------------------------------------------------------- prefill
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       bs=st.sampled_from([4, 8, 16]),
+       T=st.sampled_from([1, 3, 5, 8, 13, 16]),
+       B=st.integers(min_value=1, max_value=3),
+       null_pad=st.sampled_from([False, True]))
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+def test_paged_prefill_matches_oracle(seed, bs, T, B, null_pad):
+    """Chunk queries at ragged start positions over shuffled block
+    tables: kernel == gather oracle, with and without null-padded dead
+    columns."""
+    rng = np.random.default_rng(seed * 7 + bs + T)
+    H, KV, hd = 4, 2, 16
+    nb = int(rng.integers(1, 5))
+    cap = nb * bs
+    T = min(T, cap)
+    kp, vp = _pools(rng, 1 + B * nb + 2, bs, KV, hd)
+    tables = _tables(rng, B, nb, kp.shape[0])
+    pos = rng.integers(0, cap - T + 1, B).astype(np.int32)
+    if null_pad:
+        live = [-(-int(p + T) // bs) for p in pos]
+        tables = _null_pad_dead(tables, live)
+    q = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    scale = hd ** -0.5
+    out = ops.paged_prefill_attention(q, kp, vp, jnp.asarray(tables),
+                                      jnp.asarray(pos), scale)
+    want = ref.paged_prefill_attention_ref(q, kp, vp, jnp.asarray(tables),
+                                           jnp.asarray(pos), scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=ATOL, rtol=RTOL)
+
+
+def test_paged_prefill_single_block_degenerate():
+    """nb == 1: the whole sequence lives in one block; chunk == whole
+    capacity starting at 0."""
+    rng = np.random.default_rng(3)
+    B, bs, H, KV, hd = 2, 8, 2, 1, 16
+    kp, vp = _pools(rng, 4, bs, KV, hd)
+    tables = jnp.asarray([[1], [3]], jnp.int32)
+    pos = jnp.asarray([0, 0], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, bs, H, hd)), jnp.float32)
+    out = ops.paged_prefill_attention(q, kp, vp, tables, pos, hd ** -0.5)
+    want = ref.paged_prefill_attention_ref(q, kp, vp, tables, pos,
+                                           hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=ATOL, rtol=RTOL)
+
+
+def test_paged_prefill_full_capacity():
+    """pos + T == nb * bs for every sequence: the last chunk row attends
+    every slot of every mapped block (no dead column anywhere)."""
+    rng = np.random.default_rng(4)
+    B, bs, nb, T, H, KV, hd = 2, 4, 3, 5, 4, 2, 16
+    cap = nb * bs
+    kp, vp = _pools(rng, 1 + B * nb, bs, KV, hd)
+    tables = _tables(rng, B, nb, kp.shape[0])
+    pos = jnp.full((B,), cap - T, jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    out = ops.paged_prefill_attention(q, kp, vp, jnp.asarray(tables), pos,
+                                      hd ** -0.5)
+    want = ref.paged_prefill_attention_ref(q, kp, vp, jnp.asarray(tables),
+                                           pos, hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=ATOL, rtol=RTOL)
+
+
+def test_paged_prefill_t1_matches_decode_semantics():
+    """A one-row chunk at position p attends slots <= p — exactly what
+    the decode kernel attends with seq_len = p + 1 (ties the two
+    kernels' masking conventions together)."""
+    rng = np.random.default_rng(5)
+    B, bs, nb, H, KV, hd = 3, 8, 3, 4, 2, 16
+    kp, vp = _pools(rng, 1 + B * nb, bs, KV, hd)
+    tables = jnp.asarray(_tables(rng, B, nb, kp.shape[0]))
+    pos = jnp.asarray([0, 9, 23], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    chunk = ops.paged_prefill_attention(q, kp, vp, tables, pos, hd ** -0.5)
+    dec = ops.paged_decode_attention(q, kp, vp, tables, pos + 1, hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(dec),
+                               atol=ATOL, rtol=RTOL)
+
+
+# ---------------------------------------------------------------- split-K
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       bs=st.sampled_from([4, 8, 16]),
+       n_splits=st.sampled_from([1, 2, 3, 4, 8]),
+       B=st.integers(min_value=1, max_value=3))
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+def test_splitk_matches_oracle(seed, bs, n_splits, B):
+    """Split-K decode vs the paged decode oracle across ragged seq_lens
+    (including lengths that leave entire splits empty)."""
+    rng = np.random.default_rng(seed * 11 + bs + n_splits)
+    H, KV, hd = 4, 2, 16
+    nb = int(rng.integers(1, 7))
+    kp, vp = _pools(rng, 1 + B * nb + 2, bs, KV, hd)
+    tables = _tables(rng, B, nb, kp.shape[0])
+    lens = rng.integers(1, nb * bs + 1, B).astype(np.int32)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    scale = hd ** -0.5
+    out = ops.paged_decode_attention_splitk(q, kp, vp, jnp.asarray(tables),
+                                            jnp.asarray(lens), scale,
+                                            n_splits=n_splits)
+    want = ref.paged_decode_attention_splitk_ref(
+        q, kp, vp, jnp.asarray(tables), jnp.asarray(lens), scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=ATOL, rtol=RTOL)
+
+
+def test_splitk_matches_serial_kernel():
+    """Partitioning is an implementation detail: split-K and the serial
+    sweep kernel must agree bit-for-bit up to reduction rounding."""
+    rng = np.random.default_rng(6)
+    B, bs, nb, H, KV, hd = 2, 8, 6, 4, 2, 16
+    kp, vp = _pools(rng, 1 + B * nb, bs, KV, hd)
+    tables = jnp.asarray(_tables(rng, B, nb, kp.shape[0]))
+    lens = jnp.asarray([5, 48], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    serial = ops.paged_decode_attention(q, kp, vp, tables, lens, hd ** -0.5)
+    for ns in (2, 3, 6):
+        split = ops.paged_decode_attention_splitk(q, kp, vp, tables, lens,
+                                                  hd ** -0.5, n_splits=ns)
+        np.testing.assert_allclose(np.asarray(split), np.asarray(serial),
+                                   atol=ATOL, rtol=RTOL)
+
+
+def test_splitk_single_block_and_full_capacity():
+    rng = np.random.default_rng(8)
+    bs, H, KV, hd = 8, 2, 2, 16
+    kp, vp = _pools(rng, 5, bs, KV, hd)
+    q = jnp.asarray(rng.standard_normal((2, 1, H, hd)), jnp.float32)
+    # single block, more splits than blocks
+    t1 = jnp.asarray([[2], [4]], jnp.int32)
+    l1 = jnp.asarray([3, bs], jnp.int32)  # ragged + full capacity
+    out = ops.paged_decode_attention_splitk(q, kp, vp, t1, l1, hd ** -0.5,
+                                            n_splits=4)
+    want = ref.paged_decode_attention_ref(q, kp, vp, t1, l1, hd ** -0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=ATOL, rtol=RTOL)
+
+
+# ------------------------------------------- padded columns are never read
+def _poisoned_setup(rng, B=3, bs=8, nb=4):
+    """Pools with one all-NaN block; per-sequence tables whose dead
+    columns (past the frontier) all point at it. If any kernel fetched a
+    dead column the NaN would propagate through the softmax."""
+    H, KV, hd = 4, 2, 16
+    n_pool = 2 + B * nb
+    kp, vp = _pools(rng, n_pool, bs, KV, hd)
+    bad = n_pool - 1
+    kp = kp.at[bad].set(jnp.nan)
+    vp = vp.at[bad].set(jnp.nan)
+    tables = _tables(rng, B, nb, n_pool - 1)  # live entries avoid `bad`
+    lens = np.array([1, 2 * bs, 3 * bs - 3][:B], np.int32)
+    live = [-(-int(n) // bs) for n in lens]
+    poisoned = _null_pad_dead(tables, live, value=bad)
+    clean = _null_pad_dead(tables, live, value=1)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    return q, kp, vp, poisoned, clean, lens, hd ** -0.5
+
+
+def test_decode_never_reads_padded_columns():
+    """Regression for the serial sweep bound: the grid is bounded by the
+    live block count, so dead table columns may hold ANY value — even an
+    index of a NaN-filled block — without affecting the output."""
+    rng = np.random.default_rng(9)
+    q, kp, vp, poisoned, clean, lens, scale = _poisoned_setup(rng)
+    out = ops.paged_decode_attention(q, kp, vp, jnp.asarray(poisoned),
+                                     jnp.asarray(lens), scale)
+    want = ref.paged_decode_attention_ref(q, kp, vp, jnp.asarray(clean),
+                                          jnp.asarray(lens), scale)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=ATOL, rtol=RTOL)
+
+
+def test_decode_max_blocks_trims_grid():
+    """`max_blocks` statically trims the sweep to the caller's live
+    bound without changing the result."""
+    rng = np.random.default_rng(10)
+    q, kp, vp, poisoned, clean, lens, scale = _poisoned_setup(rng)
+    full = ops.paged_decode_attention(q, kp, vp, jnp.asarray(clean),
+                                      jnp.asarray(lens), scale)
+    trimmed = ops.paged_decode_attention(q, kp, vp, jnp.asarray(poisoned),
+                                         jnp.asarray(lens), scale,
+                                         max_blocks=3)
+    np.testing.assert_allclose(np.asarray(trimmed), np.asarray(full),
+                               atol=ATOL, rtol=RTOL)
+
+
+def test_splitk_never_reads_padded_columns():
+    rng = np.random.default_rng(11)
+    q, kp, vp, poisoned, clean, lens, scale = _poisoned_setup(rng)
+    for ns in (2, 4):
+        out = ops.paged_decode_attention_splitk(
+            q, kp, vp, jnp.asarray(poisoned), jnp.asarray(lens), scale,
+            n_splits=ns)
+        want = ref.paged_decode_attention_ref(
+            q, kp, vp, jnp.asarray(clean), jnp.asarray(lens), scale)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=ATOL, rtol=RTOL)
+
+
+@pytest.mark.parametrize("T", [1, 4, 7])
+def test_prefill_never_reads_padded_columns(T):
+    rng = np.random.default_rng(12 + T)
+    B, bs, nb, H, KV, hd = 2, 8, 4, 4, 2, 16
+    n_pool = 2 + B * nb
+    kp, vp = _pools(rng, n_pool, bs, KV, hd)
+    bad = n_pool - 1
+    kp = kp.at[bad].set(jnp.nan)
+    vp = vp.at[bad].set(jnp.nan)
+    tables = _tables(rng, B, nb, n_pool - 1)
+    pos = np.array([0, bs + 2], np.int32)
+    live = [-(-int(p + T) // bs) for p in pos]
+    poisoned = _null_pad_dead(tables, live, value=bad)
+    clean = _null_pad_dead(tables, live, value=1)
+    q = jnp.asarray(rng.standard_normal((B, T, H, hd)), jnp.float32)
+    out = ops.paged_prefill_attention(q, kp, vp, jnp.asarray(poisoned),
+                                      jnp.asarray(pos), hd ** -0.5)
+    want = ref.paged_prefill_attention_ref(q, kp, vp, jnp.asarray(clean),
+                                           jnp.asarray(pos), hd ** -0.5)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=ATOL, rtol=RTOL)
