@@ -10,7 +10,10 @@ import json
 import os
 
 from benchmarks.common import emit
-from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+from repro.config.base import InputShape, ModelConfig
+from repro.launch.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                   workload_cost)
+from repro.serving.bcedge import tp_collective_ms_per_token
 
 V5E_HBM_GB = 16.0
 
@@ -130,6 +133,79 @@ def render_kernel_table(rows) -> str:
     return "\n".join(lines)
 
 
+# =====================================================================
+# tensor-parallel collectives: analytic TP trade-off per degree
+# =====================================================================
+#: (label, ModelConfig, batch, context) — the decode shapes the sharded
+#: engine serves; a 7B-ish server model and a 1B-ish edge model
+TP_SHAPES = [
+    ("7b-decode",
+     ModelConfig(name="tp-7b", family="dense", n_layers=32, d_model=4096,
+                 n_heads=32, n_kv_heads=8, d_ff=11008, vocab_size=32_000),
+     8, 2048),
+    ("edge-1b",
+     ModelConfig(name="tp-1b", family="dense", n_layers=16, d_model=2048,
+                 n_heads=16, n_kv_heads=16, d_ff=5632, vocab_size=32_000),
+    4, 1024),
+]
+TP_DEGREES = (1, 2, 4, 8)
+
+
+def tp_rows(shapes=TP_SHAPES, degrees=TP_DEGREES):
+    """Analytic decode-step roofline per TP degree.
+
+    compute/memory come from the shared ``workload_cost`` model divided
+    over ``d`` chips (``WorkloadCost.terms``); collective bytes are the
+    per-token psum payload the guard prices
+    (``serving.bcedge.tp_collective_ms_per_token``: 2 ring all-reduces
+    of the (d_model,) residual per layer, ``2(d-1)/d`` bf16 bytes per
+    chip) times the batch. Step latency = max(compute, memory) +
+    collective; the speedup column shows where extra chips stop paying
+    for the wire.
+    """
+    rows = []
+    for label, cfg, b, ctx in shapes:
+        shape = InputShape(f"tp-{label}", ctx, b, "decode")
+        cost = workload_cost(cfg, shape)
+        base_ms = None
+        for d in degrees:
+            coll_per_chip = b * tp_collective_ms_per_token(cfg, d) \
+                * ICI_BW / 1000.0  # back to bytes for terms()
+            t = cost.terms(d, coll_per_chip)
+            step_ms = (max(t["compute_s"], t["memory_s"])
+                       + t["collective_s"]) * 1e3
+            if base_ms is None:
+                base_ms = step_ms
+            rows.append({
+                "shape": label, "tp": d, "batch": b, "ctx": ctx,
+                "compute_ms": t["compute_s"] * 1e3,
+                "memory_ms": t["memory_s"] * 1e3,
+                "collective_ms": t["collective_s"] * 1e3,
+                "step_ms": step_ms, "speedup": base_ms / step_ms,
+                "coll_frac": (t["collective_s"] * 1e3) / step_ms,
+                "bound": "collective"
+                if t["collective_s"] > max(t["compute_s"], t["memory_s"])
+                else ("memory" if t["memory_s"] > t["compute_s"]
+                      else "compute")})
+    return rows
+
+
+def render_tp_table(rows) -> str:
+    lines = [
+        "| shape | tp | batch | ctx | compute ms | memory ms |"
+        " collective ms | step ms | speedup | coll % | bound |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['shape']} | {r['tp']} | {r['batch']} | {r['ctx']} |"
+            f" {r['compute_ms']:.3f} | {r['memory_ms']:.3f} |"
+            f" {r['collective_ms']:.3f} | {r['step_ms']:.3f} |"
+            f" {r['speedup']:.2f}x | {r['coll_frac']*100:.0f}% |"
+            f" {r['bound']} |")
+    return "\n".join(lines)
+
+
 def main(fast: bool = True) -> dict:
     krows = kernel_rows()
     mem_bound = sum(1 for r in krows if r["bound"] == "memory")
@@ -137,12 +213,21 @@ def main(fast: bool = True) -> dict:
          f"cases={len(krows)} memory_bound={mem_bound}/{len(krows)}")
     print(render_kernel_table(krows))
 
+    trows = tp_rows()
+    best = {r["shape"]: r for r in trows if r["speedup"] == max(
+        x["speedup"] for x in trows if x["shape"] == r["shape"])}
+    emit("roofline.tp_collectives", 0.0,
+         f"cases={len(trows)} best_degree=" + ",".join(
+             f"{s}:tp{r['tp']}({r['speedup']:.2f}x)"
+             for s, r in sorted(best.items())))
+    print(render_tp_table(trows))
+
     base = os.path.join(os.getcwd(), "experiments", "dryrun")
     rows = load_results(base)
     if not rows:
         emit("roofline.table", 0.0, "no dry-run artifacts found; run "
              "PYTHONPATH=src python -m repro.launch.dryrun --all first")
-        return {"kernels": krows}
+        return {"kernels": krows, "tp": trows}
     ok = [r for r in rows if r["status"] == "ok"]
     fit = sum(1 for r in ok
               if r["bytes_per_device"] / 2 ** 30 <= V5E_HBM_GB)
@@ -153,7 +238,7 @@ def main(fast: bool = True) -> dict:
          f"cases={len(rows)} ok={len(ok)} "
          f"fits_16GiB={fit}/{len(ok)} dominant={dominant}")
     print(render_table(rows))
-    return {"rows": rows, "kernels": krows}
+    return {"rows": rows, "kernels": krows, "tp": trows}
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ MODULES = [
     "fig_prefix_cache",
     "fig_speculative",
     "fig_fused_kernels",
+    "fig_sharded_engine",
     "roofline_table",
 ]
 

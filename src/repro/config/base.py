@@ -221,6 +221,11 @@ class ServingConfig:
     #: simulator twin: probability each draft token is accepted (the
     #: per-draft Bernoulli of the acceptance-dependent step cost model)
     spec_accept_rate: float = 0.6
+    #: tensor-parallel degree action axis (docs/RUNTIME.md §10): devices
+    #: one instance spans on its 1D ("model",) mesh. OUTERMOST axis, so
+    #: the default single level keeps every narrower codec — and every
+    #: policy trained before the axis existed — encoding-stable
+    tp_degrees: Tuple[int, ...] = (1,)
 
     def __post_init__(self):
         assert self.exec_mode in ("round", "continuous"), self.exec_mode
@@ -233,11 +238,14 @@ class ServingConfig:
         assert self.spec_depths, "need at least one speculation depth"
         assert all(k >= 0 for k in self.spec_depths), self.spec_depths
         assert 0.0 <= self.spec_accept_rate <= 1.0, self.spec_accept_rate
+        assert self.tp_degrees, "need at least one TP degree"
+        assert all(d >= 1 for d in self.tp_degrees), self.tp_degrees
 
     @property
     def n_actions(self) -> int:
         return len(self.batch_sizes) * len(self.concurrency_levels) * \
-            len(self.token_budgets) * len(self.spec_depths)
+            len(self.token_budgets) * len(self.spec_depths) * \
+            len(self.tp_degrees)
 
     def action_to_pair(self, a: int) -> Tuple[int, int]:
         nb = len(self.batch_sizes)
@@ -267,12 +275,14 @@ class ServingConfig:
             self.pair_to_action(b, m_c)
 
     def action_to_quad(self, a: int) -> Tuple[int, int, int, int]:
-        """(b, m_c, token_budget, spec_k) — the speculation depth is the
-        OUTERMOST axis: every narrower codec (pair/triple) reads the
+        """(b, m_c, token_budget, spec_k) — the speculation depth sits
+        outside the pair/triple digits: every narrower codec reads the
         same inner digits, so trained policies and existing callers see
-        identical encodings at spec_depths=(0,)."""
+        identical encodings at spec_depths=(0,). The modulus folds away
+        the (outermost) TP-degree axis for pre-tp callers."""
         nb, nm = len(self.batch_sizes), len(self.concurrency_levels)
-        nt = len(self.token_budgets)
+        nt, nk = len(self.token_budgets), len(self.spec_depths)
+        a = a % (nb * nm * nt * nk)
         b, m_c, tb = self.action_to_triple(a)
         return b, m_c, tb, self.spec_depths[a // (nb * nm * nt)]
 
@@ -282,3 +292,20 @@ class ServingConfig:
         nt = len(self.token_budgets)
         return self.spec_depths.index(spec_k) * nb * nm * nt + \
             self.triple_to_action(b, m_c, token_budget)
+
+    def action_to_quint(self, a: int) -> Tuple[int, int, int, int, int]:
+        """(b, m_c, token_budget, spec_k, tp_degree) — the TP degree is
+        the OUTERMOST axis (same construction as the spec_k axis before
+        it), so at tp_degrees=(1,) every action encodes exactly as the
+        quad codec and narrower callers fold it away by modulus."""
+        nb, nm = len(self.batch_sizes), len(self.concurrency_levels)
+        nt, nk = len(self.token_budgets), len(self.spec_depths)
+        b, m_c, tb, sk = self.action_to_quad(a)
+        return b, m_c, tb, sk, self.tp_degrees[a // (nb * nm * nt * nk)]
+
+    def quint_to_action(self, b: int, m_c: int, token_budget: int,
+                        spec_k: int, tp_degree: int) -> int:
+        nb, nm = len(self.batch_sizes), len(self.concurrency_levels)
+        nt, nk = len(self.token_budgets), len(self.spec_depths)
+        return self.tp_degrees.index(tp_degree) * nb * nm * nt * nk + \
+            self.quad_to_action(b, m_c, token_budget, spec_k)

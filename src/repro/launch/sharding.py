@@ -180,3 +180,70 @@ def cache_shardings(mesh, cfg: ModelConfig, cache_abstract,
 
 def replicated(mesh):
     return NamedSharding(mesh, P())
+
+
+# ------------------------------------------- serving-engine TP shardings
+# The continuous serving engine spans a 1D ("model",)-only mesh carved
+# from the pool's shared device set (launch/mesh.make_tp_mesh): slots
+# and block tables are replicated, and the model dimension is TENSOR
+# parallelism only. Unlike the launch-scale rules above, serving configs
+# (tiny test models included) have dims the model axis need not divide —
+# odd vocab sizes, 2-head caches on a 4-way mesh — so every spec here is
+# filtered through ``_fit_mesh``: a sharded axis that does not divide
+# its dim falls back to replicated instead of failing inside jit.
+
+def _fit_mesh(spec: Tuple, shape: Tuple[int, ...], mesh) -> Tuple:
+    """Drop spec axes absent from ``mesh`` or not dividing their dim."""
+    out = []
+    for s, dim in zip(spec, shape):
+        keep = (s is not None and s in mesh.axis_names
+                and dim % mesh.shape[s] == 0)
+        out.append(s if keep else None)
+    return tuple(out)
+
+
+def engine_param_shardings(mesh, params_abstract) -> Any:
+    """``param_shardings`` for a serving instance: the launch TP rules,
+    divisibility-filtered per leaf (e.g. a 97-entry embedding stays
+    replicated on a 2-way mesh while wq/wk/wv/wo shard)."""
+    def sharding(path, leaf):
+        spec = tuple(param_pspec(path, leaf, mode="tp"))
+        return NamedSharding(mesh, P(*_fit_mesh(spec, leaf.shape, mesh)))
+    return tree_map_with_path(sharding, params_abstract)
+
+
+def engine_cache_pspec(path: str, leaf, mesh) -> P:
+    """PartitionSpec for one serving-engine cache leaf — dense slot
+    slabs and paged block pools alike. Linear KV leaves, dense
+    ``(B, S, n_kv, hd)`` and paged ``(n_blocks, bs, n_kv, hd)``, shard
+    the HEAD axis over ``model``, matching the column-sharded
+    wq/wk/wv: scores and the weighted-value contraction stay local per
+    head shard and the row-sharded wo psums once per step. (The
+    launch-scale rules shard dense cache LENGTH instead — right for
+    16-chip axes where n_kv never divides, wrong here where the block
+    axis is gathered through replicated tables and head counts are
+    chosen to divide the TP degree.) Recurrent/windowed leaves follow
+    the launch rules: att_state value dim, shift/conv width on
+    ``model``. Anything not divisible replicates."""
+    parts = path.split("/")
+    name = parts[-1]
+    stacked = 1 if parts[0] == "units" else 0
+    if name in ("k", "v", "ck", "cv"):
+        spec = (None, None, M, None)
+    elif name == "att_state":
+        spec = (None, None, None, M)          # (B, H, hd_k, hd_v)
+    elif name in ("att_shift", "ffn_shift", "h"):
+        spec = (None, M)                      # (B, d|w)
+    elif name == "conv":
+        spec = (None, None, M)                # (B, 3, w)
+    else:
+        spec = tuple(None for _ in range(leaf.ndim - stacked))
+    spec = _fit_mesh(spec, leaf.shape[stacked:], mesh)
+    return P(*((None,) * stacked + spec))
+
+
+def engine_cache_shardings(mesh, cache_abstract) -> Any:
+    return tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, engine_cache_pspec(path, leaf, mesh)),
+        cache_abstract)

@@ -27,6 +27,7 @@ import numpy as np
 from repro.config.base import ServingConfig
 from repro.configs.paper_edge_models import EDGE_MODELS
 from repro.core.interference import NNInterferencePredictor
+from repro.launch.roofline import ICI_BW
 from repro.serving import latency_model as lm
 from repro.serving.simulator import EdgeServingEnv
 
@@ -190,8 +191,25 @@ def run_episode(env: EdgeServingEnv, agent,
 #:  KV budget headroom frac (1.0 for dense/unlimited pools),
 #:  log1p(prefill backlog tokens), log1p(preemptions since last decision),
 #:  prefix-cache hit rate (0.0 for dense / cache-off pools),
-#:  speculative acceptance rate (0.0 for spec-off pools)]
-POOL_STATE_DIM = 11
+#:  speculative acceptance rate (0.0 for spec-off pools),
+#:  shared-device-set utilization (0.0 for unbudgeted pools)]
+POOL_STATE_DIM = 12
+
+
+def tp_collective_ms_per_token(model_cfg, tp_degree: int) -> float:
+    """Analytic per-token collective surcharge at TP degree ``d``
+    (docs/RUNTIME.md §10): each layer psums its (d_model,) residual
+    twice per token (the row-sharded attention wo and the MLP down
+    projection), and a ring all-reduce moves ``2(d-1)/d`` of the bf16
+    payload per chip — the ``collective_s`` roofline term
+    (``launch.roofline.WorkloadCost.terms``) at those bytes. This is
+    what the guard layers on top of the measured per-degree token-cost
+    fit, so a degree with no samples yet is still priced."""
+    if tp_degree <= 1:
+        return 0.0
+    bytes_per_chip = model_cfg.n_layers * 2 \
+        * 2.0 * (tp_degree - 1) / tp_degree * model_cfg.d_model * 2
+    return bytes_per_chip / ICI_BW * 1000.0
 
 
 class PoolScheduler:
@@ -277,6 +295,8 @@ class PoolScheduler:
             np.log1p(max(0, new_preempts)),
             float(occ.get("prefix_hit_rate", 0.0)),
             min(1.0, max(0.0, float(p.spec_accept_rate()))),
+            min(1.0, p.devices_in_use() / p.n_devices)
+            if getattr(p, "n_devices", None) else 0.0,
         ], np.float32)
 
     def _kv_feasible(self, model: str, b: int, m_c: int) -> bool:
@@ -317,7 +337,8 @@ class PoolScheduler:
         return max(slack, 2.0) / self.decode_steps_mean
 
     def _feasible(self, model: str, b: int, m_c: int,
-                  token_budget: int = 0, spec_k: int = 0) -> bool:
+                  token_budget: int = 0, spec_k: int = 0,
+                  tp_degree: int = 1) -> bool:
         """Eq.-1 feasibility per iteration at the PROPOSED overlap: the
         calibrated contention model's predicted pool-iteration latency
         must fit the most urgent request's per-iteration budget. The
@@ -338,9 +359,23 @@ class PoolScheduler:
         of one, so ``k * b`` extra tokens are priced through the same
         token-cost fit. With no explicit token budget the decode floor
         is ``b`` tokens (one per slot), so the priced work is
-        ``b + k * b``."""
+        ``b + k * b``.
+
+        ``tp_degree`` prices the LAYOUT (docs/RUNTIME.md §10): the
+        proposed ``m_c`` instances each span ``tp_degree`` devices, so
+        (a) the other tenants' devices plus ``m_c * tp_degree`` must
+        fit the pool's shared device set, and (b) iteration work is
+        priced through that degree's own token-cost fit plus the
+        analytic per-token collective surcharge
+        (``tp_collective_ms_per_token``)."""
         if not self._kv_feasible(model, b, m_c):
             return False
+        n_dev = getattr(self.pool, "n_devices", None)
+        if n_dev:
+            dev_others = sum(i.tp_degree for i in self.pool.live()
+                             if i.model != model)
+            if dev_others + m_c * tp_degree > n_dev:
+                return False
         budget = self._iter_budget_ms(model)
         t1, c = self.pool.contention()
         if t1 > 0.0:
@@ -352,8 +387,13 @@ class PoolScheduler:
         work = token_budget
         if spec_k > 0:
             work = (token_budget if token_budget > 0 else b) + spec_k * b
+        if tp_degree > 1 and work == 0:
+            work = b  # decode floor: the collective surcharge is per token
         if work > 0:
-            base, per_tok = self.pool.token_cost()
+            base, per_tok = self.pool.token_cost(tp_degree) \
+                if tp_degree > 1 else self.pool.token_cost()
+            per_tok += tp_collective_ms_per_token(
+                self.pool.configs[model], tp_degree)
             if per_tok > 0.0 and lm.predicted_token_iter_ms(
                     base, per_tok, work) > budget:
                 return False
@@ -361,13 +401,13 @@ class PoolScheduler:
 
     def _apply(self, model: str, a: int) -> int:
         cfg = self.cfg
-        b, m_c, tb, sk = cfg.action_to_quad(a)
+        b, m_c, tb, sk, tp = cfg.action_to_quint(a)
         # under backlog the guard steps aside (same rationale as the
         # simulator path: only throughput clears an old queue)
         slo = self.slo_ms.get(model, 1000.0)
         backlog = self.pool.oldest_slack_ms(model) < 0.5 * slo
         if self.guard and not backlog and \
-                not self._feasible(model, b, m_c, tb, sk):
+                not self._feasible(model, b, m_c, tb, sk, tp):
             self.guard_interventions += 1
             bs_levels = list(cfg.batch_sizes)
             ms = list(cfg.concurrency_levels)
@@ -379,32 +419,44 @@ class PoolScheduler:
             # speculation depths ordered deepest→shallowest: walking
             # forward sheds the verify surcharge until k collapses to 0
             ks = sorted(cfg.spec_depths, reverse=True)
+            # TP degrees widest→narrowest: stepping down sheds the
+            # per-token collective surcharge AND frees (m_c·Δd) devices
+            tps = sorted(cfg.tp_degrees, reverse=True)
             bi, mi = bs_levels.index(b), ms.index(m_c)
-            ti, ki = tbs.index(tb), ks.index(sk)
+            ti, ki, di = tbs.index(tb), ks.index(sk), tps.index(tp)
             # degrade speculation first (it is pure surcharge — k*b
             # extra verify tokens — and dropping it never sheds
             # capacity), then the token budget (a tighter cap bounds
-            # the iteration), then concurrency (it both contends and
-            # multiplies KV residency), then batch
+            # the iteration), then the TP degree (collectives and
+            # devices go, per-instance KV capacity shrinks), then
+            # concurrency (it both contends and multiplies KV
+            # residency), then batch
             while ki < len(ks) - 1 or ti < len(tbs) - 1 \
-                    or mi > 0 or bi > 0:
+                    or di < len(tps) - 1 or mi > 0 or bi > 0:
                 if ki < len(ks) - 1:
                     ki += 1
                 elif ti < len(tbs) - 1:
                     ti += 1
+                elif di < len(tps) - 1:
+                    di += 1
                 elif mi > 0:
                     mi -= 1
                 else:
                     bi -= 1
                 if self._feasible(model, bs_levels[bi], ms[mi],
-                                  tbs[ti], ks[ki]):
+                                  tbs[ti], ks[ki], tps[di]):
                     break
-            b, m_c, tb, sk = bs_levels[bi], ms[mi], tbs[ti], ks[ki]
+            b, m_c, tb, sk, tp = bs_levels[bi], ms[mi], tbs[ti], \
+                ks[ki], tps[di]
         self.pool.set_slot_cap(model, b)
+        if hasattr(self.pool, "set_tp_degree"):
+            # before scale_to: a degree change drains mismatched
+            # instances and the scale-up respawns at the new layout
+            self.pool.set_tp_degree(model, tp)
         self.pool.scale_to(model, m_c)
         self.pool.set_token_budget(model, tb or None)
         self.pool.set_spec_k(model, sk)
-        return cfg.quad_to_action(b, m_c, tb, sk)
+        return cfg.quint_to_action(b, m_c, tb, sk, tp)
 
     # ---- decision epoch --------------------------------------------------
     def control(self) -> Dict[str, tuple]:

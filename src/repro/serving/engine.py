@@ -33,9 +33,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import ModelConfig
+from repro.launch.sharding import (engine_cache_shardings,
+                                   engine_param_shardings, replicated)
 from repro.models import build_model
-from repro.models.transformer import (_split_layers, gather_blocks,
-                                      gather_blocks_stacked, pad_cache,
+from repro.models.transformer import (_split_layers, pad_cache,
                                       paged_layer_kind, scatter_blocks,
                                       scatter_blocks_stacked)
 
@@ -572,7 +573,8 @@ class ContinuousBatchingEngine:
                  token_budget: Optional[int] = None,
                  prefix_cache: bool = False,
                  spec_k: int = 0, spec_ngram: int = 2,
-                 proposer=None, prefill_mode: str = "auto"):
+                 proposer=None, prefill_mode: str = "auto",
+                 mesh=None):
         if cfg.enc_dec:
             # cross-attention K/V is unmasked (_cross_core attends every
             # encoder row), so grafting a shorter prefilled ck/cv into the
@@ -614,14 +616,16 @@ class ContinuousBatchingEngine:
         #: chunk DIRECTLY against the paged pool through the slot's
         #: block table (repro.models.attention.attention_chunk_paged):
         #: no per-slot staging cache, no prefix gather, no completion
-        #: graft scatter. "staging" keeps the legacy dense staging-cache
-        #: round trip (gather cached prefix -> chunk into staging ->
-        #: scatter-graft). "auto" picks fused whenever the layout
+        #: graft scatter. "auto" picks fused whenever the layout
         #: supports it: paged + chunked + every layer's decode state in
         #: the block pool (the same gate as the prefix cache — a dense
         #: per-slot leaf cannot take a batch-1 chunk against the shared
-        #: pool pytree).
-        if prefill_mode not in ("auto", "fused", "staging"):
+        #: pool pytree). Layouts that fail the gate (dense, hybrid
+        #: stacks) keep the staging-cache round trip: chunk into a
+        #: per-slot staging cache, scatter-graft on completion. The
+        #: legacy "staging" override for paged all-linear stacks is
+        #: gone — fused is the only paged prefill path.
+        if prefill_mode not in ("auto", "fused"):
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         fused_ok = (kv_layout == "paged" and self.chunked
                     and supports_prefix_cache(cfg))
@@ -658,11 +662,42 @@ class ContinuousBatchingEngine:
         self.n_prefix_hits = 0
         self.n_prefix_hit_tokens = 0
         self.n_prefill_chunk_tokens = 0
+        #: tensor parallelism (docs/ARCHITECTURE.md §11): a 1D
+        #: ``("model",)`` mesh (launch/mesh.make_tp_mesh) this instance
+        #: spans. Params are placed under the launch TP rules, the KV
+        #: cache — dense slabs and the paged block pool alike — is
+        #: HEAD-sharded, and the step functions are jitted with
+        #: NamedSharding in/out specs. Block tables, the allocator and
+        #: every slot/queue structure stay host-side (replicated): the
+        #: scheduler's view of the engine is layout-independent.
+        self.mesh = mesh
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    f"engine mesh needs a 'model' axis, got "
+                    f"{mesh.axis_names}")
+            if not self.chunked:
+                raise NotImplementedError(
+                    "tensor-parallel serving needs the chunked-prefill "
+                    "path (frontend engines stay single-device)")
+            tp = int(mesh.shape["model"])
+            if cfg.n_kv_heads % tp or cfg.n_heads % tp:
+                raise ValueError(
+                    f"{cfg.name}: tp_degree {tp} must divide n_heads "
+                    f"{cfg.n_heads} and n_kv_heads {cfg.n_kv_heads} "
+                    "(the KV pool is head-sharded over the model axis)")
         if share_from is not None and share_from.cfg == cfg:
             # co-resident instances of the same model share weights and
             # jit caches (docs/RUNTIME.md: spawn must be cheap for the
             # pool's scale_to to be a usable action); the KV slot cache
-            # below stays per-instance
+            # below stays per-instance. Sharing requires the SAME mesh:
+            # the donor's params live in that layout and its jits carry
+            # its in/out shardings, so the pool keys templates by
+            # (model, tp_degree).
+            if getattr(share_from, "mesh", None) != mesh:
+                raise ValueError(
+                    "share_from donor spans a different mesh; instances "
+                    "share weights/jit only at the same TP degree")
             self.model = share_from.model
             self.params = share_from.params
             self._prefill = share_from._prefill
@@ -674,12 +709,22 @@ class ContinuousBatchingEngine:
         else:
             self.model = build_model(cfg, remat=False)
             self.params = self.model.init(jax.random.PRNGKey(seed), dtype)
+            if mesh is not None:
+                self.params = jax.device_put(
+                    self.params, engine_param_shardings(mesh, self.params))
             self._prefill = jax.jit(self.model.prefill)
-            self._prefill_chunk = jax.jit(self.model.prefill_chunk) \
-                if self.chunked else None
-            self._decode = jax.jit(self.model.decode_step)
-            self._verify = jax.jit(self.model.verify_step) \
-                if supports_speculation(cfg) else None
+            if mesh is None:
+                self._prefill_chunk = jax.jit(self.model.prefill_chunk) \
+                    if self.chunked else None
+                self._decode = jax.jit(self.model.decode_step)
+                self._verify = jax.jit(self.model.verify_step) \
+                    if supports_speculation(cfg) else None
+            else:
+                # sharded step jits need the cache pytree for their
+                # in/out specs — created after the cache init below
+                self._prefill_chunk = None
+                self._decode = None
+                self._verify = None
         if kv_layout == "paged":
             self.block_size = block_size
             self.blocks_per_slot = -(-self.cache_len // block_size)
@@ -705,6 +750,33 @@ class ContinuousBatchingEngine:
             # margin. cache_len stays the LOGICAL capacity everywhere.
             self.cache = self.model.init_cache(
                 self.n_slots, self.cache_len + self.spec_max, dtype)
+        if mesh is not None:
+            # place the cache across the mesh (heads sharded, block axis
+            # whole: tables gather it locally on every shard), then jit
+            # the step functions with explicit NamedSharding in/out
+            # specs. The batch dict — tokens, pos, block tables — is
+            # replicated: every shard sees the same schedule. The same
+            # cache shardings tree serves the per-slot staging caches
+            # non-fused layouts chunk into (same pytree structure, and
+            # specs never shard the batch/length dims that differ).
+            cshard = engine_cache_shardings(mesh, self.cache)
+            self.cache = jax.device_put(self.cache, cshard)
+            if self._decode is None:
+                pshard = engine_param_shardings(mesh, self.params)
+                rep = replicated(mesh)
+                self._prefill_chunk = jax.jit(
+                    self.model.prefill_chunk,
+                    in_shardings=(pshard, cshard, rep),
+                    out_shardings=(rep, cshard)) if self.chunked else None
+                self._decode = jax.jit(
+                    self.model.decode_step,
+                    in_shardings=(pshard, cshard, rep),
+                    out_shardings=(rep, cshard))
+                self._verify = jax.jit(
+                    self.model.verify_step,
+                    in_shardings=(pshard, cshard, rep),
+                    out_shardings=(rep, cshard)) \
+                    if supports_speculation(cfg) else None
         self.pos = np.zeros((self.n_slots,), np.int32)
         self.pending_tok = np.zeros((self.n_slots,), np.int32)
         self.slots = [_Slot() for _ in range(self.n_slots)]
@@ -726,6 +798,11 @@ class ContinuousBatchingEngine:
     # ---- bookkeeping -----------------------------------------------------
     def _now(self) -> float:
         return time.perf_counter() - self._t0
+
+    @property
+    def tp_degree(self) -> int:
+        """Devices this instance spans (1 = single-device engine)."""
+        return int(self.mesh.shape["model"]) if self.mesh is not None else 1
 
     @property
     def free_slots(self) -> List[int]:
@@ -908,9 +985,9 @@ class ContinuousBatchingEngine:
         the last block is NOT mapped shared: its final token must be
         recomputed (the first decode step needs its logits) and the
         graft that lands it writes the whole block — so the cached block
-        is copied on divergence instead (read into staging via
-        ``gather_blocks``, scattered back into a private block), and
-        writes only ever target unshared blocks."""
+        is duplicated into the slot's private tail block on divergence
+        (``_copy_pool_block``), and writes only ever target unshared
+        blocks."""
         keys = self._chain_keys(seq)
         n_hit = 0
         for k in keys:
@@ -958,36 +1035,6 @@ class ContinuousBatchingEngine:
     def _live_shared_blocks(self, prompt: np.ndarray) -> int:
         return self._live_shared_blocks_prepadded(
             self._padded_seq(np.asarray(prompt, np.int32)))
-
-    def _fill_staging(self, staging, block_ids: List[int], rows: int):
-        """Copy the cached prefix KV — rows [0, rows) gathered from the
-        physical ``block_ids`` — into a fresh staging cache, so chunked
-        prefill of the suffix attends exactly what a full prefill would
-        have produced. Every layer is paged here (``supports_prefix_cache``
-        gates admission), so every leaf is a k/v pool."""
-        ids = jnp.asarray(block_ids, jnp.int32)
-
-        def fill(st, pool, stacked: bool):
-            out = dict(st)
-            for key in ("k", "v"):
-                if stacked:
-                    g = gather_blocks_stacked(pool[key], ids)
-                    out[key] = st[key].at[:, 0, :rows].set(g[:, :rows])
-                else:
-                    g = gather_blocks(pool[key], ids)
-                    out[key] = st[key].at[0, :rows].set(g[:rows])
-            return out
-
-        new: Dict = {}
-        if "units" in staging:
-            new["units"] = tuple(
-                fill(sc, fc, stacked=True)
-                for sc, fc in zip(staging["units"], self.cache["units"]))
-        if "tail" in staging:
-            new["tail"] = tuple(
-                fill(sc, fc, stacked=False)
-                for sc, fc in zip(staging["tail"], self.cache["tail"]))
-        return new
 
     def _copy_pool_block(self, dst: int, src: int) -> None:
         """Device-copy one physical pool block across every paged layer
@@ -1164,28 +1211,12 @@ class ContinuousBatchingEngine:
                             self._copy_pool_block(ids[-1], tmp)
                             self.allocator.free([tmp])
                 else:
+                    # non-fused (dense / hybrid) layouts never see prefix
+                    # hits — the prefix cache requires the same layer gate
+                    # as fused prefill — so the staging cache starts empty
+                    assert pos0 == 0 and not shared_ids
                     staging = self.model.init_cache(1, self.cache_len,
                                                     self.dtype)
-                    if pos0:
-                        # chunked prefill skips straight to the first
-                        # uncached token: staging gets the cached prefix
-                        # KV (gather_blocks), including — copy-on-write —
-                        # the first block_size-1 rows of a fully-covering
-                        # chain's tail block, read via a transient
-                        # reference
-                        fill_ids = list(shared_ids)
-                        tmp = None
-                        if cow_key is not None:
-                            tmp = self.allocator.acquire(cow_key)
-                            if tmp is None:  # LRU revival refused: shrink
-                                pos0 = len(shared_ids) * self.block_size
-                            else:
-                                fill_ids.append(tmp)
-                        if pos0:
-                            staging = self._fill_staging(staging, fill_ids,
-                                                         pos0)
-                        if tmp is not None:
-                            self.allocator.free([tmp])
                 if pos0:
                     self.n_prefix_hits += 1
                     self.n_prefix_hit_tokens += pos0
@@ -1239,9 +1270,9 @@ class ContinuousBatchingEngine:
         """Advance in-slot chunked prefills by at most ``budget_left``
         tokens (power-of-two chunk pieces so the compile cache stays
         bounded at one shape per piece size). Returns tokens processed.
-        A slot whose last chunk lands is grafted (staging mode) or just
-        published (fused mode) and joins the decode batch of this same
-        iteration.
+        A slot whose last chunk lands is grafted (non-fused layouts) or
+        just published (fused mode) and joins the decode batch of this
+        same iteration.
 
         Fused mode runs each chunk directly against the paged pool: the
         batch carries the slot's block-table row (built from its
@@ -1283,8 +1314,8 @@ class ContinuousBatchingEngine:
 
     def _finish_prefill(self, slot: int, logits) -> None:
         """Last chunk landed: point the block table at the allocated
-        prefix blocks and hand the slot to the decode loop. In staging
-        mode the staging cache is grafted into the slot first (skipping
+        prefix blocks and hand the slot to the decode loop. Non-fused
+        layouts graft the staging cache into the slot first (skipping
         the shared prefix blocks, which are immutable); in fused mode
         the chunks already wrote the pool through the table, so there is
         nothing to scatter. With the prefix cache on, the now-complete
@@ -1698,9 +1729,9 @@ class ContinuousBatchingEngine:
                 continue
             if s.prefilling:
                 # fused chunks write the pool directly, so every
-                # prefilled token occupies its block; in staging mode
-                # pool blocks hold only the shared prefix until the
-                # graft and the chunked suffix lives in staging
+                # prefilled token occupies its block; non-fused hybrid
+                # layouts hold nothing in the pool until the graft (the
+                # chunked prefix lives in the staging cache)
                 c = s.prefill_pos if self.fused_prefill \
                     else min(s.prefill_pos, s.n_shared * bs)
             else:
@@ -1780,4 +1811,5 @@ class ContinuousBatchingEngine:
             "n_spec_proposed": float(self.n_spec_proposed),
             "n_spec_accepted": float(self.n_spec_accepted),
             "n_spec_steps": float(self.n_spec_steps),
+            "tp_degree": float(self.tp_degree),
         }

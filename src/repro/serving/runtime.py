@@ -118,11 +118,13 @@ class ModelInstance:
     per-instance bookkeeping (resident requests, Eq.-1 slot share)."""
 
     def __init__(self, instance_id: int, model: str,
-                 engine: ContinuousBatchingEngine, kv_blocks: int = 0):
+                 engine: ContinuousBatchingEngine, kv_blocks: int = 0,
+                 tp_degree: int = 1):
         self.instance_id = instance_id
         self.model = model
         self.engine = engine
         self.kv_blocks = kv_blocks  # share of the pool's block budget
+        self.tp_degree = tp_degree  # devices this instance spans
         self.state = STARTING
         self.requests: Dict[int, PoolRequest] = {}  # engine rid -> request
         self.n_served = 0
@@ -169,7 +171,9 @@ class ModelInstancePool:
                  max_preemptions: int = 2,
                  token_budget: Optional[int] = None,
                  prefix_cache: bool = False,
-                 spec_k: int = 0):
+                 spec_k: int = 0,
+                 tp_degree: int = 1,
+                 n_devices: Optional[int] = None):
         self.configs = dict(configs)
         self.max_instances = max_instances
         self.max_slots = max_slots
@@ -200,6 +204,24 @@ class ModelInstancePool:
         #: with k=0, mirroring the prefix-cache capability gate.
         self.spec_cap = max(0, spec_k)
         self.spec_ks: Dict[str, int] = {m: self.spec_cap for m in configs}
+        #: tensor parallelism (docs/RUNTIME.md §10): per-model TP degree
+        #: — the scheduler's fifth axis (``set_tp_degree``). An instance
+        #: at degree d spans d devices of the shared device set on a 1D
+        #: ``("model",)`` mesh (heads sharded, block tables replicated),
+        #: so ``m_c`` and the degree jointly partition the hardware:
+        #: Σ tp over live instances is capped by ``n_devices`` when set.
+        #: Unlike spec_k a live engine cannot re-shard, so a degree
+        #: change drains mismatched instances and respawns via scale_to.
+        self.tp_degrees: Dict[str, int] = {
+            m: max(1, tp_degree) for m in configs}
+        self.n_devices = n_devices
+        #: one mesh per degree, lazily built over the FIRST tp devices —
+        #: value-equal meshes are what lets same-degree instances share
+        #: the weight/jit template (engine.share_from requires it). On
+        #: the symmetric host meshes this runtime targets, which slice
+        #: an instance sits on is interchangeable; the scheduler prices
+        #: the device BUDGET, not slice identity.
+        self._meshes: Dict[int, object] = {}
         #: target grant for a paged instance; default = dense-equivalent
         #: worst case. Sizing it from measured occupancy
         #: (``occupancy_tokens_per_seq``) is how a paged pool fits more
@@ -224,6 +246,11 @@ class ModelInstancePool:
         #: (tokens processed, iteration wall ms) over non-compiling busy
         #: iterations — calibrates latency_model.fit_token_cost
         self.token_samples: List[Tuple[int, float]] = []
+        #: the same samples keyed by TP degree, recorded only on
+        #: iterations whose busy instances all share one degree — the
+        #: per-degree token-cost fits the guard prices layouts with
+        #: (mixed-degree iterations feed only the global fit)
+        self.tp_token_samples: Dict[int, List[Tuple[int, float]]] = {}
         #: (total resident sequences, Σ kv_used_tokens) per pure-decode
         #: iteration — calibrates latency_model.fit_occupancy
         self.occupancy_samples: List[Tuple[int, int]] = []
@@ -231,7 +258,11 @@ class ModelInstancePool:
             m: [] for m in self.configs}
         self.slot_caps: Dict[str, int] = {m: max_slots for m in self.configs}
         self.queues: Dict[str, List[tuple]] = {m: [] for m in self.configs}
-        self._templates: Dict[str, ContinuousBatchingEngine] = {}
+        #: weight/jit donors keyed (model, tp_degree) — instances share
+        #: a template only at the same degree (sharded params live on
+        #: that degree's mesh)
+        self._templates: Dict[Tuple[str, int],
+                              ContinuousBatchingEngine] = {}
         self.admission_log: List[Tuple[int, int]] = []  # (request, instance)
         self.retired: List[ModelInstance] = []
         self.n_rejected = 0
@@ -270,6 +301,41 @@ class ModelInstancePool:
         iteration time, so predictions must not count them)."""
         return sum(1 for i in self.live() if i.n_resident > 0)
 
+    # ---- tensor parallelism (docs/RUNTIME.md §10) ------------------------
+    def devices_in_use(self) -> int:
+        """Devices the live instances span: Σ tp_degree. With
+        ``n_devices`` set this is what bounds further spawns — m_c and
+        TP degree jointly partition the shared device set."""
+        return sum(i.tp_degree for i in self.live())
+
+    def _tp_mesh(self, tp: int):
+        """The shared 1D ``("model",)`` mesh for degree ``tp`` (None for
+        tp=1: single-device engines never touch jax device state).
+        Cached per degree so every same-degree instance spans a
+        value-equal mesh and can share the weight/jit template."""
+        if tp <= 1:
+            return None
+        mesh = self._meshes.get(tp)
+        if mesh is None:
+            from repro.launch.mesh import make_tp_mesh
+            mesh = make_tp_mesh(tp)
+            self._meshes[tp] = mesh
+        return mesh
+
+    def set_tp_degree(self, model: str, tp: int) -> None:
+        """The fifth knob (docs/RUNTIME.md §10): TP degree for future
+        spawns of ``model``. A live engine cannot re-shard its mesh in
+        place, so RUNNING instances at a different degree start
+        DRAINING (resident work completes first) and the next
+        ``scale_to`` respawns at the new degree."""
+        tp = max(1, tp)
+        if self.tp_degrees.get(model) == tp:
+            return
+        self.tp_degrees[model] = tp
+        for inst in self.instances[model]:
+            if inst.state == RUNNING and inst.tp_degree != tp:
+                inst.state = DRAINING
+
     def _dense_equiv_blocks(self) -> int:
         """Dense-equivalent worst-case grant: the whole
         (max_slots, max_seq) slab expressed in blocks — what a dense
@@ -292,43 +358,63 @@ class ModelInstancePool:
             return self._dense_equiv_blocks()
         return self.blocks_per_instance or self._dense_equiv_blocks()
 
-    def can_spawn(self) -> bool:
-        """Instance budget AND block budget allow one more spawn —
-        ``scale_to`` is constrained by actual free blocks, not the
-        analytic memory curve. A dense instance must fit its whole slab;
-        a paged one can start on a partial grant (min one slot)."""
+    def can_spawn(self, model: Optional[str] = None) -> bool:
+        """Instance budget, device budget AND block budget allow one
+        more spawn — ``scale_to`` is constrained by actual free blocks,
+        not the analytic memory curve. A dense instance must fit its
+        whole slab; a paged one can start on a partial grant (min one
+        slot). ``model`` prices that model's TP degree against the
+        shared device set (degree 1 assumed when omitted)."""
         if self.total_live() >= self.max_instances:
+            return False
+        tp = self.tp_degrees.get(model, 1) if model else 1
+        if self.n_devices is not None and \
+                self.devices_in_use() + tp > self.n_devices:
             return False
         if self.kv_blocks_free is None:
             return True
         if self.kv_layout == "paged":
-            return self.kv_blocks_free >= self._min_viable_blocks()
+            return self.kv_blocks_free >= \
+                -(-self._min_viable_blocks() // tp)
         return self.kv_blocks_free >= self._dense_equiv_blocks()
 
     def spawn(self, model: str) -> ModelInstance:
-        """STARTING → RUNNING. Raises when the pool-wide instance budget
-        or the shared KV block budget is exhausted (use scale_to for
-        clamped semantics)."""
+        """STARTING → RUNNING. Raises when the pool-wide instance
+        budget, the shared device set or the shared KV block budget is
+        exhausted (use scale_to for clamped semantics)."""
         if self.total_live() >= self.max_instances:
             raise RuntimeError(
                 f"pool at max_instances={self.max_instances}")
+        tp = self.tp_degrees.get(model, 1)
+        if self.n_devices is not None and \
+                self.devices_in_use() + tp > self.n_devices:
+            raise RuntimeError(
+                f"device budget exhausted: {model!r} at tp_degree={tp} "
+                f"needs {tp} of {self.n_devices} devices, "
+                f"{self.n_devices - self.devices_in_use()} free")
         grant = self._spawn_grant()
+        charge = grant
         kw = {}
         if self.kv_blocks_free is not None:
             if self.kv_layout == "paged":
-                grant = min(grant, self.kv_blocks_free)
+                # head-sharding spreads every block over the instance's
+                # tp devices, so one budget (per-device) block buys tp
+                # pool blocks: the charge is ceil(grant / tp) and the
+                # engine keeps the full grant (docs/RUNTIME.md §10)
+                charge = min(-(-grant // tp), self.kv_blocks_free)
+                grant = charge * tp
                 if grant < self._min_viable_blocks():
                     raise RuntimeError(
                         f"KV block budget exhausted "
                         f"({self.kv_blocks_free} free of "
                         f"{self.kv_block_budget})")
-            elif self.kv_blocks_free < grant:
+            elif self.kv_blocks_free < charge:
                 raise RuntimeError(
                     f"KV block budget exhausted: dense slab needs "
-                    f"{grant} blocks, {self.kv_blocks_free} free")
-            self.kv_blocks_free -= grant
+                    f"{charge} blocks, {self.kv_blocks_free} free")
+            self.kv_blocks_free -= charge
         elif self.kv_layout != "paged":
-            grant = 0  # unlimited dense pool: nothing to account
+            grant = charge = 0  # unlimited dense pool: nothing to account
         if self.kv_layout == "paged":
             kw = {"kv_layout": "paged", "block_size": self.block_size,
                   "kv_blocks": grant,
@@ -336,16 +422,18 @@ class ModelInstancePool:
                   and supports_prefix_cache(self.configs[model])}
         if self.spec_cap > 0 and supports_speculation(self.configs[model]):
             kw["spec_k"] = self.spec_cap
-        tmpl = self._templates.get(model)
+        tmpl = self._templates.get((model, tp))
         eng = ContinuousBatchingEngine(
             self.configs[model], max_slots=self.max_slots,
             max_seq=self.max_seq, seed=self.seed, share_from=tmpl,
-            token_budget=self.token_budgets.get(model), **kw)
+            token_budget=self.token_budgets.get(model),
+            mesh=self._tp_mesh(tp), **kw)
         # spawn into the CURRENT scheduler-set depth (≤ the built cap)
         eng.spec_k = min(self.spec_ks.get(model, 0), eng.spec_max)
         if tmpl is None:
-            self._templates[model] = eng
-        inst = ModelInstance(self._next_iid, model, eng, kv_blocks=grant)
+            self._templates[(model, tp)] = eng
+        inst = ModelInstance(self._next_iid, model, eng, kv_blocks=charge,
+                             tp_degree=tp)
         self._next_iid += 1
         self.instances[model].append(inst)
         inst.state = RUNNING  # engine construction == warm start
@@ -377,10 +465,14 @@ class ModelInstancePool:
                     : len(run) - m_c]:
                 inst.state = DRAINING
             return m_c
-        draining = [i for i in self.instances[model] if i.state == DRAINING]
+        # revive only degree-matched instances: reviving a stale-degree
+        # engine would undo a set_tp_degree decision
+        draining = [i for i in self.instances[model]
+                    if i.state == DRAINING
+                    and i.tp_degree == self.tp_degrees.get(model, 1)]
         while len(self.running(model)) < m_c and draining:
             draining.pop(0).state = RUNNING  # revive
-        while len(self.running(model)) < m_c and self.can_spawn():
+        while len(self.running(model)) < m_c and self.can_spawn(model):
             self.spawn(model)
         return len(self.running(model))
 
@@ -440,10 +532,12 @@ class ModelInstancePool:
                     keep.append(inst)
             self.instances[model] = keep
             if not keep:
-                # last instance gone: drop the shared weight/jit template
-                # so the model's memory really frees (live instances hold
-                # their own references, so this is always safe)
-                self._templates.pop(model, None)
+                # last instance gone: drop the shared weight/jit
+                # templates (every degree) so the model's memory really
+                # frees (live instances hold their own references, so
+                # this is always safe)
+                for key in [k for k in self._templates if k[0] == model]:
+                    self._templates.pop(key)
 
     # ---- router (docs/RUNTIME.md admission rules) ------------------------
     def submit(self, model: str, prompt: np.ndarray, slo_ms: float = 1000.0,
@@ -706,10 +800,20 @@ class ModelInstancePool:
             # (tokens processed, wall ms) — the fit behind the
             # per-iteration token-budget knob (docs/RUNTIME.md §8);
             # compile iterations would swamp the slope
-            self.token_samples.append(
-                (sum(i.engine.last_step_tokens for i in busy), iter_ms))
+            sample = (sum(i.engine.last_step_tokens for i in busy),
+                      iter_ms)
+            self.token_samples.append(sample)
             if len(self.token_samples) > 2 * _SAMPLE_WINDOW:
                 del self.token_samples[:-_SAMPLE_WINDOW]
+            degrees = {i.tp_degree for i in busy}
+            if len(degrees) == 1:
+                # degree-homogeneous iteration: attributable to ONE
+                # layout, so it also feeds that degree's token-cost fit
+                bucket = self.tp_token_samples.setdefault(
+                    degrees.pop(), [])
+                bucket.append(sample)
+                if len(bucket) > 2 * _SAMPLE_WINDOW:
+                    del bucket[:-_SAMPLE_WINDOW]
         if pure_decode and not compiled:
             self.contention_samples.append((overlap, iter_ms))
             self.occupancy_samples.append(
@@ -801,6 +905,7 @@ class ModelInstancePool:
         self.contention_samples = []
         self.occupancy_samples = []
         self.token_samples = []
+        self.tp_token_samples = {}
         self.n_rejected = 0
         self.n_preempted = 0
         self.preempts_by_model = {m: 0 for m in self.configs}
@@ -818,10 +923,20 @@ class ModelInstancePool:
             return 0.0, 0.0
         return lm.fit_contention(self.contention_samples[-_SAMPLE_WINDOW:])
 
-    def token_cost(self) -> Tuple[float, float]:
+    def token_cost(self, tp_degree: Optional[int] = None
+                   ) -> Tuple[float, float]:
         """Calibrated ``(base_ms, per_token_ms)`` iteration-cost model
         (``latency_model.fit_token_cost``); ``(0, 0)`` before warmup.
-        Prices the per-iteration token budget for the scheduler guard."""
+        Prices the per-iteration token budget for the scheduler guard.
+
+        ``tp_degree`` selects that degree's fit (measured only on
+        degree-homogeneous iterations); a degree without enough samples
+        yet falls back to the global fit, and the guard layers the
+        analytic collective term on top (docs/RUNTIME.md §10)."""
+        if tp_degree is not None:
+            bucket = self.tp_token_samples.get(tp_degree, [])
+            if len(bucket) >= 8:
+                return lm.fit_token_cost(bucket[-_SAMPLE_WINDOW:])
         if len(self.token_samples) < 8:
             return 0.0, 0.0
         return lm.fit_token_cost(self.token_samples[-_SAMPLE_WINDOW:])
@@ -927,6 +1042,7 @@ class ModelInstancePool:
                 "mean_utility": float(np.mean(
                     [r.utility for r in served])) if served else 0.0,
                 "m_c": float(self.m_c(model)),
+                "tp_degree": float(self.tp_degrees.get(model, 1)),
                 "queued": float(len(self.queues[model])),
                 "preempted": float(self.preempts_by_model.get(model, 0)),
             }
@@ -938,6 +1054,7 @@ class ModelInstancePool:
         out = {
             "n_steps": float(self.n_steps),
             "live_instances": float(self.total_live()),
+            "devices_in_use": float(self.devices_in_use()),
             "retired_instances": float(len(self.retired)),
             "n_rejected": float(self.n_rejected),
             "n_preempted": float(self.n_preempted),

@@ -80,15 +80,16 @@ def test_budgeted_engine_matches_round_engine_greedy():
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("prefill_mode", ["staging", "fused"])
+@pytest.mark.parametrize("prefill_mode", ["fused"])
 @pytest.mark.parametrize("prefix_cache", [False, True])
 def test_paged_chunked_identity_staging_vs_fused(prefill_mode, prefix_cache):
     """The fused path (chunks attend the block pool directly through
-    their table row) and the legacy staging path (side cache + graft)
-    are the SAME function: both stay token-identical to the dense round
-    engine on paged chunked prefill, with and without prefix reuse.
-    Parametrizing the flag here is the deletion gate for the staging
-    path — drop "staging" from the list, then delete the code."""
+    their table row) stays token-identical to the dense round engine on
+    paged chunked prefill, with and without prefix reuse. This
+    parametrization was the deletion gate for the legacy staging round
+    trip — "staging" was dropped and the code deleted (the staging
+    cache survives only for layouts fused prefill cannot serve: dense
+    and hybrid stacks, covered by the engine fuzz harness)."""
     round_eng = InferenceEngine(TINY, max_seq=64)
     eng = ContinuousBatchingEngine(
         TINY, max_slots=2, max_seq=64, kv_layout="paged", block_size=8,

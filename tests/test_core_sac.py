@@ -65,6 +65,40 @@ def test_spec_depths_validation():
         ServingConfig(spec_accept_rate=1.5)
 
 
+def test_action_quint_roundtrip():
+    cfg = ServingConfig(token_budgets=(0, 32), spec_depths=(0, 4),
+                        tp_degrees=(1, 2, 4))
+    assert cfg.n_actions == len(cfg.batch_sizes) * \
+        len(cfg.concurrency_levels) * 2 * 2 * 3
+    for a in range(cfg.n_actions):
+        b, mc, tb, k, tp = cfg.action_to_quint(a)
+        assert cfg.quint_to_action(b, mc, tb, k, tp) == a
+        # inner digits agree with every narrower codec (tp OUTERMOST,
+        # then k): pre-tp callers fold the axis away by modulus
+        assert cfg.action_to_quad(a) == (b, mc, tb, k)
+        assert cfg.action_to_triple(a) == (b, mc, tb)
+        assert cfg.action_to_pair(a) == (b, mc)
+
+
+def test_action_codecs_stable_without_tp_axis():
+    """At tp_degrees=(1,) the quint codec is the quad codec plus tp=1 —
+    pre-TP action ids (and trained policies) are unaffected."""
+    cfg = ServingConfig(token_budgets=(0, 16), spec_depths=(0, 2))
+    assert cfg.tp_degrees == (1,)
+    for a in range(cfg.n_actions):
+        b, mc, tb, k = cfg.action_to_quad(a)
+        assert cfg.action_to_quint(a) == (b, mc, tb, k, 1)
+        assert cfg.quint_to_action(b, mc, tb, k, 1) == \
+            cfg.quad_to_action(b, mc, tb, k) == a
+
+
+def test_tp_degrees_validation():
+    with pytest.raises(AssertionError):
+        ServingConfig(tp_degrees=())
+    with pytest.raises(AssertionError):
+        ServingConfig(tp_degrees=(1, 0))
+
+
 # ---------------------------------------------------------------- SAC
 class Bandit:
     """Contextual bandit: best action = argmax ctx-dependent payoff."""

@@ -8,8 +8,8 @@ across engine variants (dense + paged layouts, prefix cache on/off,
 token budget on/off, tight block budgets that force LRU reclaim,
 speculative k up to 4 with mid-flight k toggling — paged variants run
 the FUSED prefill path, chunks attending the pool directly through
-block tables, plus two legacy staging-mode variants so the flag-gated
-path keeps coverage until its deletion), and asserts:
+block tables; the hybrid layer-family sweeps exercise the staging-cache
+round trip fused prefill cannot serve), and asserts:
 
 * after EVERY operation — allocator conservation:
   ``n_free + n_cached + n_live == n_blocks`` (disjoint id sets),
@@ -119,14 +119,14 @@ def _check_invariants(eng, ctx: str) -> None:
                 assert not eng.block_tables[i, n:].any(), ctx
             else:
                 # mid-prefill slots point at the null block until the
-                # prefill lands, in BOTH modes: staging chunks write a
-                # side cache, and fused chunks carry their own table row
-                # — either way the decode batch's dummy writes for this
-                # row must keep sinking into the null block
+                # prefill lands, in BOTH modes: non-fused chunks write a
+                # staging cache, and fused chunks carry their own table
+                # row — either way the decode batch's dummy writes for
+                # this row must keep sinking into the null block
                 assert not eng.block_tables[i].any(), ctx
 
 
-N_VARIANTS = 8
+N_VARIANTS = 6
 
 
 def _engine_variant(cfg, variant: int):
@@ -134,9 +134,9 @@ def _engine_variant(cfg, variant: int):
     variants (1-5) resolve ``prefill_mode="auto"`` to the FUSED path on
     these all-linear configs — so the prefix-cache (2, 3) and
     speculative (4, 5) variants prove token-identity of fused prefill
-    under preempt/resume/rollback interleavings. Variants 6-7 pin the
-    legacy staging path (prefix-cache and speculative respectively) so
-    it keeps differential coverage while it remains selectable."""
+    under preempt/resume/rollback interleavings. The hybrid
+    layer-family sweeps below cover the staging-cache round trip (the
+    non-fused path dense and hybrid layouts keep)."""
     if variant == 0:
         return ContinuousBatchingEngine(
             cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
@@ -171,27 +171,12 @@ def _engine_variant(cfg, variant: int):
             cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
             share_from=_template(cfg), kv_layout="paged", block_size=8,
             prefix_cache=bool(spec), **spec)
-    if variant == 5:
-        # tight budget + speculation: block rollback under LRU reclaim
-        # pressure and budget-degraded effective k
-        return ContinuousBatchingEngine(
-            cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
-            share_from=_template(cfg), kv_layout="paged", block_size=8,
-            kv_blocks=16, token_budget=12, **spec)
-    # legacy staging-mode coverage (explicit prefill_mode="staging"):
-    # the gather/graft round trip must stay token-identical too until
-    # the flag-gated path is deleted
-    if variant == 6:
-        kw = {"prefix_cache": True} \
-            if cfg.name in ("tiny", "tiny-tail") else {}
-        return ContinuousBatchingEngine(
-            cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
-            share_from=_template(cfg), kv_layout="paged", block_size=8,
-            token_budget=12, prefill_mode="staging", **kw)
+    # tight budget + speculation: block rollback under LRU reclaim
+    # pressure and budget-degraded effective k
     return ContinuousBatchingEngine(
         cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
         share_from=_template(cfg), kv_layout="paged", block_size=8,
-        prefix_cache=bool(spec), prefill_mode="staging", **spec)
+        kv_blocks=16, token_budget=12, **spec)
 
 
 def _run_schedule(cfg, seed: int) -> None:
@@ -254,8 +239,7 @@ def _run_schedule(cfg, seed: int) -> None:
 def test_fuzz_smoke_schedules():
     """Tier-1 slice of the sweep: a handful of schedules covering every
     variant of the canonical tiny model once — including both
-    speculative variants (seeds 4, 5) and the legacy staging-mode
-    variants (seeds 6, 7)."""
+    speculative variants (seeds 4, 5)."""
     for seed in range(N_VARIANTS):
         _run_schedule(TINY, seed)
 
@@ -263,7 +247,7 @@ def test_fuzz_smoke_schedules():
 @pytest.mark.slow
 def test_fuzz_full_sweep_tiny():
     """The CI sweep: >= ENGINE_FUZZ_SCHEDULES seeded schedules (default
-    200) on the canonical model across all eight engine variants."""
+    200) on the canonical model across all six engine variants."""
     for seed in range(N_SCHEDULES):
         _run_schedule(TINY, seed)
 
