@@ -34,6 +34,7 @@ MODULES = [
     "fig_speculative",
     "fig_fused_kernels",
     "fig_sharded_engine",
+    "fig_async_serving",
     "roofline_table",
 ]
 

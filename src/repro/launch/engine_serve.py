@@ -27,7 +27,7 @@ Run:  PYTHONPATH=src python -m repro.launch.serve --engine
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 
@@ -322,6 +322,78 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
     return report
 
 
+def serve_http(models: Sequence[str] = ("qwen3-0.6b",),
+               host: str = "127.0.0.1", port: int = 8808,
+               slo_ms: float = 2000.0, max_instances: int = 4,
+               max_slots: int = 4, seed: int = 0,
+               kv_layout: str = "paged",
+               kv_block_budget: Optional[int] = None,
+               backpressure: bool = True, max_queue_depth: int = 8,
+               control_ms: float = 500.0,
+               ready: Optional[Callable[[int], None]] = None,
+               configs: Optional[Dict] = None) -> None:
+    """Push-mode HTTP serving (docs/RUNTIME.md §11): the pool runs on a
+    background :class:`~repro.serving.driver.ServingDriver` thread with
+    the ``PoolScheduler`` re-deciding (b, m_c) on a wall-clock tick, and
+    an asyncio :class:`~repro.launch.server.ServingFrontend` streams
+    per-token events over HTTP until interrupted. ``ready(port)`` fires
+    once the socket is bound (``port=0`` picks an ephemeral port).
+    ``configs`` overrides the registry lookup with explicit
+    ``ModelConfig`` objects — tools/server_smoke.py serves a tiny
+    throwaway model that way."""
+    import asyncio
+
+    from repro.launch.server import ServingFrontend
+    from repro.serving.driver import ServingDriver
+
+    cfgs = configs or {m: get_reduced_config(m) for m in models}
+    for m, cfg in cfgs.items():
+        print(f"loading reduced {cfg.name} "
+              f"(d={cfg.d_model}, L={cfg.n_layers})...")
+    pool = ModelInstancePool(cfgs, max_instances=max_instances,
+                             max_slots=max_slots, max_seq=128, seed=seed,
+                             kv_layout=kv_layout,
+                             kv_block_budget=kv_block_budget)
+    per_model_mc = max(1, max_instances // max(1, len(cfgs)))
+    scfg = ServingConfig(
+        batch_sizes=tuple(b for b in (1, 2, 4, 8) if b <= max_slots),
+        concurrency_levels=tuple(range(1, per_model_mc + 1)))
+    sched = PoolScheduler(pool, scfg,
+                          slo_ms={m: slo_ms for m in cfgs},
+                          seed=seed)
+    sched.control()
+    for m in cfgs:
+        if pool.m_c(m) == 0:
+            pool.scale_to(m, 1)
+    pool.warmup(seed=seed)
+
+    async def _run() -> None:
+        with ServingDriver(pool, on_tick=sched.tick,
+                           tick_interval_s=control_ms / 1000.0) as driver:
+            fe = ServingFrontend(driver, host=host, port=port,
+                                 backpressure=backpressure,
+                                 max_queue_depth=max_queue_depth,
+                                 default_slo_ms=slo_ms)
+            await fe.start()
+            print(f"[http] serving {sorted(cfgs)} on "
+                  f"http://{host}:{fe.port} "
+                  f"(backpressure {'on' if backpressure else 'off'})")
+            if ready is not None:
+                ready(fe.port)
+            try:
+                await fe.serve_forever()
+            except asyncio.CancelledError:
+                pass
+            finally:
+                await fe.stop()
+                print(f"[http] stopped; stats: {driver.stats()}")
+
+    try:
+        asyncio.run(_run())
+    except KeyboardInterrupt:
+        print("[http] interrupted")
+
+
 def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
          duration_s: float = 20.0, rps: float = 12.0,
          slo_ms: float = 1500.0, models: Optional[Sequence[str]] = None,
@@ -329,8 +401,17 @@ def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
          kv_block_budget: Optional[int] = None,
          token_budget: Optional[int] = None,
          preemption: bool = False, prefix_cache: bool = False,
-         shared_prefix_tokens: float = 0.0, spec_k: int = 0) -> None:
-    if models:
+         shared_prefix_tokens: float = 0.0, spec_k: int = 0,
+         serve_http_port: Optional[int] = None,
+         backpressure: bool = True, max_queue_depth: int = 8) -> None:
+    if serve_http_port is not None:
+        serve_http(models or [arch], port=serve_http_port, slo_ms=slo_ms,
+                   max_instances=max_instances,
+                   kv_layout=kv_layout if kv_layout else "paged",
+                   kv_block_budget=kv_block_budget,
+                   backpressure=backpressure,
+                   max_queue_depth=max_queue_depth)
+    elif models:
         if exec_mode != "continuous":
             print("multi-model pool serving is continuous-only; "
                   "running with --exec-mode continuous")

@@ -10,6 +10,8 @@ the real-JAX engine (``--engine``), in round or continuous execution mode
     PYTHONPATH=src python -m repro.launch.serve --engine \
         --models qwen3-0.6b,recurrentgemma-2b --exec-mode continuous \
         --max-instances 4
+    PYTHONPATH=src python -m repro.launch.serve --engine --serve-http \
+        --port 8808 --models qwen3-0.6b
 """
 from __future__ import annotations
 
@@ -78,6 +80,20 @@ def main() -> None:
                          "one of a small population of shared prefixes "
                          "of this many tokens (the regime "
                          "--prefix-cache exploits). Default: 0 (off)")
+    ap.add_argument("--serve-http", action="store_true",
+                    help="push-mode HTTP serving (docs/RUNTIME.md §11): "
+                         "background driver steps the pool, asyncio "
+                         "front-end streams per-token ndjson events; "
+                         "requires --engine. Runs until interrupted")
+    ap.add_argument("--port", type=int, default=8808,
+                    help="--serve-http listen port (0 = ephemeral)")
+    ap.add_argument("--no-backpressure", action="store_true",
+                    help="--serve-http: disable 429 admission "
+                         "backpressure (accept-everything)")
+    ap.add_argument("--max-queue-depth", type=int, default=8,
+                    help="--serve-http: queued requests tolerated per "
+                         "model before non-admissible arrivals get "
+                         "429 + Retry-After")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="self-speculative decoding depth: propose up "
                          "to k n-gram draft tokens per slot and verify "
@@ -93,6 +109,9 @@ def main() -> None:
     if args.prefix_cache and args.engine and args.kv_layout != "paged":
         ap.error("--prefix-cache on the engine needs --kv-layout paged "
                  "(sharing is block-granular)")
+    if args.serve_http and not args.engine:
+        ap.error("--serve-http requires --engine (the HTTP front-end "
+                 "streams real engine tokens)")
 
     if args.engine:
         from repro.launch import engine_serve
@@ -106,7 +125,11 @@ def main() -> None:
                           preemption=args.preemption,
                           prefix_cache=args.prefix_cache,
                           shared_prefix_tokens=args.shared_prefix_tokens,
-                          spec_k=max(0, args.spec_k))
+                          spec_k=max(0, args.spec_k),
+                          serve_http_port=args.port if args.serve_http
+                          else None,
+                          backpressure=not args.no_backpressure,
+                          max_queue_depth=args.max_queue_depth)
         return
 
     from repro.config.base import ServingConfig

@@ -244,6 +244,8 @@ class PoolScheduler:
         #: per-model preemption counter at the last decision (the state
         #: vector feeds the delta, docs/RUNTIME.md §8)
         self._preempt_seen: Dict[str, int] = {m: 0 for m in pool.configs}
+        #: results already harvested from pool history by ``tick()``
+        self._tick_seen: Dict[str, int] = {m: 0 for m in pool.configs}
 
     # ---- feedback --------------------------------------------------------
     def record(self, results) -> None:
@@ -474,6 +476,29 @@ class PoolScheduler:
             self._last[model] = (s, a)
             applied[model] = self.cfg.action_to_pair(a)
         return applied
+
+    def tick(self, pool=None) -> Dict[str, tuple]:
+        """Push-mode decision epoch (docs/RUNTIME.md §11): harvest the
+        results completed since the last call straight from the pool's
+        history, then run ``control()``. Signature matches the
+        ``ServingDriver.on_tick`` hook, which invokes it on a wall-clock
+        cadence against LIVE queue state — the pool argument is
+        positional sugar and must be this scheduler's own pool.
+
+        Under the driver the serving loop never sees a ``step()`` return
+        value to ``record()``, so the tick replays the per-model results
+        appended since the last harvest instead."""
+        if pool is not None and pool is not self.pool:
+            raise ValueError("tick() got a different pool than the one "
+                             "this scheduler controls")
+        for model in self.pool.configs:
+            hist = self.pool.results(model)
+            seen = self._tick_seen.get(model, 0)
+            if seen > len(hist):  # pool.reset_metrics() cleared history
+                seen = 0
+            self.record(hist[seen:])
+            self._tick_seen[model] = len(hist)
+        return self.control()
 
 
 def collect_interference_dataset(cfg: ServingConfig, n: int = 2000,

@@ -26,7 +26,7 @@ import functools
 import hashlib
 import time
 from collections import OrderedDict
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -466,6 +466,10 @@ class _Slot:
     requested_new: int = 0      # caller-requested max_new (pre-clamp)
     truncated: bool = False
     n_preempted: int = 0
+    #: engine-clock time the FIRST token landed (carried across
+    #: preemption/resume so TTFT reflects the original first token;
+    #: -1 before any token)
+    first_token_s: float = -1.0
     # speculative decoding: drafts proposed / accepted for this sequence
     # since (re-)admission — preemption recomputes, so these reset with
     # the slot; the engine-level counters stay monotonic
@@ -496,6 +500,7 @@ class PreemptedRequest:
     requested_new: int
     truncated: bool
     n_preempted: int
+    first_token_s: float = -1.0
 
 
 @dataclasses.dataclass
@@ -511,6 +516,7 @@ class _WaitingReq:
     requested_new: int = 0
     truncated: bool = False
     n_preempted: int = 0
+    first_token_s: float = -1.0
 
 
 @dataclasses.dataclass
@@ -533,10 +539,30 @@ class ContinuousResult:
     #: resident (since the last re-admission, if it was preempted)
     n_spec_proposed: int = 0
     n_spec_accepted: int = 0
+    #: engine-clock time the first token landed (preemption-safe: the
+    #: ORIGINAL first token, not the post-resume one; -1 if none landed)
+    first_token_s: float = -1.0
+    #: the request was cancelled (client disconnect / explicit cancel):
+    #: ``tokens`` holds the partial completion emitted before the cancel
+    cancelled: bool = False
 
     @property
     def queue_wait_s(self) -> float:
         return self.admit_s - self.submit_s
+
+    @property
+    def ttft_s(self) -> float:
+        """Submit -> first token on the engine clock (-1 if no token)."""
+        return self.first_token_s - self.submit_s \
+            if self.first_token_s >= 0 else -1.0
+
+    @property
+    def tpot_s(self) -> float:
+        """Mean seconds per token after the first (-1 below 2 tokens)."""
+        if self.first_token_s < 0 or len(self.tokens) < 2:
+            return -1.0
+        return (self.finish_s - self.first_token_s) \
+            / (len(self.tokens) - 1)
 
 
 class ContinuousBatchingEngine:
@@ -785,6 +811,17 @@ class ContinuousBatchingEngine:
         self.n_admitted = 0
         self.n_evicted = 0
         self.n_preempted = 0
+        self.n_cancelled = 0
+        #: push-mode lifecycle hooks (docs/RUNTIME.md §11). Both fire
+        #: synchronously inside engine calls, so handlers must be cheap
+        #: and must not reenter the engine.
+        #: ``on_token(request_id, token, index)`` — per emitted token;
+        #: ``index`` is the global completion position, stable across
+        #: preemption/resume (re-prefilled context tokens never refire).
+        self.on_token: Optional[Callable] = None
+        #: ``on_state(request_id, state)`` with state in
+        #: {"prefill", "decode"} — slot assignment and prefill completion
+        self.on_state: Optional[Callable] = None
         #: tokens processed by the last step() (prefill chunks + resident
         #: decode) and whether it compiled a new shape — the pool's
         #: token-cost calibration reads both (docs/RUNTIME.md §8)
@@ -798,6 +835,24 @@ class ContinuousBatchingEngine:
     # ---- bookkeeping -----------------------------------------------------
     def _now(self) -> float:
         return time.perf_counter() - self._t0
+
+    def _note_tokens(self, s: _Slot, n_new: int) -> None:
+        """Stamp ``first_token_s`` and fire ``on_token`` for the last
+        ``n_new`` entries of ``s.tokens``. Indices are global completion
+        positions: tokens emitted before a preemption live in the
+        re-prefilled context (``seq_tokens[base_len:]``) and offset the
+        post-resume ones, so a streaming consumer sees every position
+        exactly once."""
+        if s.first_token_s < 0:
+            s.first_token_s = self._now()
+        if self.on_token is not None:
+            prior = len(s.seq_tokens) - s.base_len \
+                if s.seq_tokens is not None else 0
+            base = prior + len(s.tokens) - n_new
+            for j in range(n_new):
+                self.on_token(s.request_id,
+                              int(s.tokens[len(s.tokens) - n_new + j]),
+                              base + j)
 
     @property
     def tp_degree(self) -> int:
@@ -947,7 +1002,8 @@ class ContinuousBatchingEngine:
             rid, np.asarray(req.seq_tokens, np.int32), req.max_new,
             req.submit_s, prepadded=True, base_len=req.base_len,
             requested_new=req.requested_new, truncated=req.truncated,
-            n_preempted=req.n_preempted))
+            n_preempted=req.n_preempted,
+            first_token_s=req.first_token_s))
         return rid
 
     # ---- prefix cache (docs/ARCHITECTURE.md §5) --------------------------
@@ -1227,8 +1283,11 @@ class ContinuousBatchingEngine:
                     n_shared=len(shared_ids), seq_tokens=seq,
                     base_len=base_len, prefill_pos=pos0, staging=staging,
                     requested_new=w.requested_new, truncated=w.truncated,
-                    n_preempted=w.n_preempted)
+                    n_preempted=w.n_preempted,
+                    first_token_s=w.first_token_s)
                 self.pos[slot] = 0
+                if self.on_state is not None:
+                    self.on_state(w.request_id, "prefill")
             else:
                 self._admit_inline(w, slot, reserved)
             self.n_admitted += 1
@@ -1264,6 +1323,10 @@ class ContinuousBatchingEngine:
                 requested_new=w.requested_new, truncated=w.truncated)
         self.pos[slot] = F + S
         self.pending_tok[slot] = int(sample_tokens(logits[0, -1, :]))
+        if self.on_state is not None:
+            # single-shot prefill: the slot is decoding the moment
+            # admission returns (QUEUED -> DECODE, docs/RUNTIME.md §11)
+            self.on_state(w.request_id, "decode")
 
     # ---- chunked prefill (docs/ARCHITECTURE.md §5) -----------------------
     def _prefill_step(self, budget_left: int) -> int:
@@ -1336,6 +1399,8 @@ class ContinuousBatchingEngine:
         s.staging = None
         self.pos[slot] = s.prefill_pos
         self.pending_tok[slot] = int(sample_tokens(logits[0, -1, :]))
+        if self.on_state is not None:
+            self.on_state(s.request_id, "decode")
 
     # ---- preemption (docs/RUNTIME.md §8) ---------------------------------
     def preemption_candidates(self) -> List[Tuple[int, int, int]]:
@@ -1385,7 +1450,8 @@ class ContinuousBatchingEngine:
         req = PreemptedRequest(
             s.request_id, seq, base_len=s.base_len, max_new=s.remaining,
             submit_s=s.submit_s, requested_new=s.requested_new,
-            truncated=s.truncated, n_preempted=s.n_preempted + 1)
+            truncated=s.truncated, n_preempted=s.n_preempted + 1,
+            first_token_s=s.first_token_s)
         if self.kv_layout == "paged":
             self.allocator.free(s.blocks)
             self.allocator.unreserve(s.n_outstanding)
@@ -1398,8 +1464,66 @@ class ContinuousBatchingEngine:
                 req.request_id, req.seq_tokens, req.max_new, req.submit_s,
                 prepadded=True, base_len=req.base_len,
                 requested_new=req.requested_new, truncated=req.truncated,
-                n_preempted=req.n_preempted))
+                n_preempted=req.n_preempted,
+                first_token_s=req.first_token_s))
         return req
+
+    # ---- cancellation (docs/RUNTIME.md §11) ------------------------------
+    def cancel(self, request_id: int) -> Optional[ContinuousResult]:
+        """Tear down ``request_id`` at WHATEVER phase it is in — queued,
+        mid-chunk prefill, decoding, or requeued-after-preemption — and
+        free its memory synchronously: blocks (shared prefix references
+        included) return to the allocator and the unconsumed reservation
+        tail is cancelled before this returns, so a mass disconnect
+        frees capacity for the next admission pass, not after a drain.
+
+        Returns a ``ContinuousResult`` with ``cancelled=True`` carrying
+        the partial completion, or ``None`` if the id is not live here
+        (already finished, or resident elsewhere in a pool). Unlike
+        ``preempt`` this is legal mid-prefill: the staging cache /
+        partially written pool blocks are simply discarded — nothing was
+        registered in the prefix cache yet, so no key can reference
+        them."""
+        for qi, w in enumerate(self.waiting):
+            if w.request_id == request_id:
+                self.waiting.pop(qi)
+                # a requeued preemption carries its pre-eviction tokens
+                # in the prepadded context; a fresh prompt has none
+                emitted = w.prompt[w.base_len:] if w.prepadded \
+                    else np.zeros((0,), np.int32)
+                self.n_cancelled += 1
+                return ContinuousResult(
+                    request_id, np.asarray(emitted, np.int32),
+                    submit_s=w.submit_s, admit_s=-1.0,
+                    finish_s=self._now(), n_iters=0,
+                    truncated=w.truncated, n_preempted=w.n_preempted,
+                    first_token_s=w.first_token_s, cancelled=True)
+        for i, s in enumerate(self.slots):
+            if not (s.active and s.request_id == request_id):
+                continue
+            emitted = s.tokens
+            if s.seq_tokens is not None and s.base_len < len(s.seq_tokens):
+                emitted = list(s.seq_tokens[s.base_len:]) + s.tokens
+            res = ContinuousResult(
+                request_id, np.asarray(emitted, np.int32),
+                submit_s=s.submit_s, admit_s=s.admit_s,
+                finish_s=self._now(), n_iters=len(emitted),
+                truncated=s.truncated, n_preempted=s.n_preempted,
+                n_spec_proposed=s.n_spec_proposed,
+                n_spec_accepted=s.n_spec_accepted,
+                first_token_s=s.first_token_s, cancelled=True)
+            if self.kv_layout == "paged":
+                # same free path as eviction: refcounted frees park
+                # still-registered prefix blocks in the LRU pool
+                self.allocator.free(s.blocks)
+                self.allocator.unreserve(s.n_outstanding)
+                self.block_tables[i, :] = 0
+            self.pos[i] = 0
+            self.slots[i] = _Slot()
+            self.n_cancelled += 1
+            self.n_evicted += 1
+            return res
+        return None
 
     # ---- iteration -------------------------------------------------------
     def step(self) -> List[ContinuousResult]:
@@ -1434,6 +1558,7 @@ class ContinuousBatchingEngine:
             s.tokens.append(int(self.pending_tok[i]))
             s.n_emitted += 1
             s.remaining -= 1
+            self._note_tokens(s, 1)
         batch = {"tokens": jnp.asarray(self.pending_tok[:, None]),
                  "pos": jnp.asarray(self.pos)}
         if self.kv_layout == "paged":
@@ -1474,7 +1599,8 @@ class ContinuousBatchingEngine:
                     s.request_id, np.asarray(emitted, np.int32),
                     submit_s=s.submit_s, admit_s=s.admit_s, finish_s=now,
                     n_iters=len(emitted), truncated=s.truncated,
-                    n_preempted=s.n_preempted))
+                    n_preempted=s.n_preempted,
+                    first_token_s=s.first_token_s))
                 if self.kv_layout == "paged":
                     # free-on-evict: blocks return to the pool, the
                     # unconsumed tail of the reservation is cancelled
@@ -1586,6 +1712,7 @@ class ContinuousBatchingEngine:
             s.tokens.extend(int(t) for t in toks[i, :a + 1])
             s.n_emitted += a + 1
             s.remaining -= a + 1
+            self._note_tokens(s, a + 1)
             new_pos = int(self.pos[i]) + a + 1
             if self.kv_layout == "paged":
                 self._trim_blocks(i, new_pos)
@@ -1603,7 +1730,8 @@ class ContinuousBatchingEngine:
                     n_iters=len(emitted), truncated=s.truncated,
                     n_preempted=s.n_preempted,
                     n_spec_proposed=s.n_spec_proposed,
-                    n_spec_accepted=s.n_spec_accepted))
+                    n_spec_accepted=s.n_spec_accepted,
+                    first_token_s=s.first_token_s))
                 if self.kv_layout == "paged":
                     self.allocator.free(s.blocks)
                     self.allocator.unreserve(s.n_outstanding)
@@ -1804,6 +1932,7 @@ class ContinuousBatchingEngine:
             "n_prefix_hits": float(self.n_prefix_hits),
             "queue_depth": float(len(self.waiting)),
             "n_preempted": float(self.n_preempted),
+            "n_cancelled": float(self.n_cancelled),
             "prefill_backlog_tokens": float(self.prefill_backlog_tokens),
             "token_budget": float(self.token_budget or 0),
             "spec_k": float(min(max(0, self.spec_k), self.spec_max)),

@@ -42,7 +42,7 @@ import dataclasses
 import heapq
 import itertools
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -50,9 +50,12 @@ from repro.config.base import ModelConfig
 from repro.core.interference import engine_features
 from repro.core.utility import utility
 from repro.serving import latency_model as lm
+from repro.serving import request as lifecycle
 from repro.serving.engine import (ContinuousBatchingEngine,
-                                  PreemptedRequest, supports_prefix_cache,
+                                  ContinuousResult, PreemptedRequest,
+                                  supports_prefix_cache,
                                   supports_speculation)
+from repro.serving.request import RequestLifecycle
 
 # instance lifecycle states (docs/RUNTIME.md state machine)
 STARTING = "starting"
@@ -83,6 +86,15 @@ class PoolRequest:
     #: (docs/RUNTIME.md §8)
     resume: Optional[PreemptedRequest] = None
     n_preempted: int = 0
+    #: pool-clock time the first token landed (-1 before any token);
+    #: pool-level so it survives cross-instance preemption/resume, where
+    #: engine clocks are not comparable
+    first_token_s: float = -1.0
+    #: tokens streamed to listeners so far (highest global index + 1)
+    n_streamed: int = 0
+    #: push-mode state machine + callbacks (docs/RUNTIME.md §11); always
+    #: attached by ``submit`` — front-ends hook it via ``add_listener``
+    lifecycle: Optional[RequestLifecycle] = None
 
     @property
     def deadline_s(self) -> float:
@@ -103,13 +115,36 @@ class PoolResult:
     slo_ms: float
     utility: float = 0.0
     rejected: bool = False
+    #: torn down before finishing (client disconnect / explicit cancel);
+    #: ``tokens`` holds the partial completion
+    cancelled: bool = False
+    #: pool-clock first-token time (-1 if no token landed)
+    first_token_s: float = -1.0
 
     @property
     def latency_ms(self) -> float:
         return (self.finish_s - self.submit_s) * 1000.0
 
     @property
+    def ttft_ms(self) -> float:
+        """Submit -> first token (-1 if no token landed)."""
+        return (self.first_token_s - self.submit_s) * 1000.0 \
+            if self.first_token_s >= 0 else -1.0
+
+    @property
+    def tpot_ms(self) -> float:
+        """Mean ms per token after the first (-1 below two tokens)."""
+        if self.first_token_s < 0 or len(self.tokens) < 2:
+            return -1.0
+        return (self.finish_s - self.first_token_s) * 1000.0 \
+            / (len(self.tokens) - 1)
+
+    @property
     def violated(self) -> bool:
+        # a cancelled request has no completion to be late — the client
+        # walked away; report() counts cancellations separately
+        if self.cancelled:
+            return False
         return self.rejected or self.latency_ms > self.slo_ms
 
 
@@ -266,7 +301,23 @@ class ModelInstancePool:
         self.admission_log: List[Tuple[int, int]] = []  # (request, instance)
         self.retired: List[ModelInstance] = []
         self.n_rejected = 0
+        self.n_cancelled = 0
         self.n_steps = 0
+        #: per-request event listeners (docs/RUNTIME.md §11): request_id
+        #: -> callable taking one dict per event ("prefill", "decode",
+        #: "token", "preempted", "finished", "cancelled", "rejected").
+        #: Fired synchronously inside pool calls — a front-end bridges to
+        #: its own loop (e.g. asyncio call_soon_threadsafe). A listener
+        #: that raises is dropped: one dead client must not take the
+        #: serving loop down.
+        self._listeners: Dict[int, Callable] = {}
+        self.n_listener_errors = 0
+        #: client-observed serving metrics, HTTP-independent (pool clock,
+        #: submit -> first token / finish): ms samples for the stats()
+        #: percentiles, trimmed to the trailing window like every other
+        #: sample list
+        self.ttft_samples: List[float] = []
+        self.tpot_samples: List[float] = []
         #: (total live instances, iteration wall ms) calibration samples
         self.contention_samples: List[Tuple[int, float]] = []
         self._results: Dict[str, List[PoolResult]] = {
@@ -278,6 +329,58 @@ class ModelInstancePool:
     # ---- clock -----------------------------------------------------------
     def now(self) -> float:
         return time.perf_counter() - self._t0
+
+    # ---- push-mode events (docs/RUNTIME.md §11) --------------------------
+    def add_listener(self, request_id: int, fn: Callable) -> None:
+        """Register ``fn(event_dict)`` for every lifecycle event of
+        ``request_id``. One listener per request; removed automatically
+        on the terminal event (or when it raises)."""
+        self._listeners[request_id] = fn
+
+    def remove_listener(self, request_id: int) -> None:
+        self._listeners.pop(request_id, None)
+
+    def _emit(self, req: PoolRequest, event: str, **payload) -> None:
+        fn = self._listeners.get(req.request_id)
+        if fn is None:
+            return
+        ev = {"event": event, "request_id": req.request_id,
+              "t_s": self.now()}
+        ev.update(payload)
+        try:
+            fn(ev)
+        except Exception:  # noqa: BLE001 — dead client, not our bug
+            self.n_listener_errors += 1
+            self._listeners.pop(req.request_id, None)
+
+    def _on_engine_token(self, inst: "ModelInstance", erid: int,
+                         tok: int, idx: int) -> None:
+        """Engine emitted one token for the sequence it knows as
+        ``erid``: stamp pool-clock first-token time and push the event.
+        ``idx`` is the global completion index (stable across
+        preemption), so ``n_streamed`` never double-counts a resume."""
+        req = inst.requests.get(erid)
+        if req is None:  # defensive: engine-local sequence (warm drain)
+            return
+        now = self.now()
+        if req.first_token_s < 0:
+            req.first_token_s = now
+        req.n_streamed = max(req.n_streamed, idx + 1)
+        if req.lifecycle is not None:
+            req.lifecycle.token(int(tok), int(idx), now)
+        self._emit(req, "token", token=int(tok), index=int(idx))
+
+    def _on_engine_state(self, inst: "ModelInstance", erid: int,
+                         state: str) -> None:
+        """Engine moved the sequence between phases ("prefill" at slot
+        assignment, "decode" at prefill completion) — advance the
+        lifecycle machine and surface the event."""
+        req = inst.requests.get(erid)
+        if req is None:
+            return
+        if req.lifecycle is not None and not req.lifecycle.terminal:
+            req.lifecycle.to(state, self.now())
+        self._emit(req, state, instance_id=inst.instance_id)
 
     # ---- lifecycle (docs/RUNTIME.md state machine) -----------------------
     def live(self, model: Optional[str] = None) -> List[ModelInstance]:
@@ -434,6 +537,13 @@ class ModelInstancePool:
             self._templates[(model, tp)] = eng
         inst = ModelInstance(self._next_iid, model, eng, kv_blocks=charge,
                              tp_degree=tp)
+        # push-mode hooks (docs/RUNTIME.md §11): the engine reports
+        # per-token emissions and phase changes; the pool translates
+        # engine request ids to pool requests and fans out to listeners
+        eng.on_token = (lambda erid, tok, idx, _inst=inst:
+                        self._on_engine_token(_inst, erid, tok, idx))
+        eng.on_state = (lambda erid, state, _inst=inst:
+                        self._on_engine_state(_inst, erid, state))
         self._next_iid += 1
         self.instances[model].append(inst)
         inst.state = RUNNING  # engine construction == warm start
@@ -551,12 +661,110 @@ class ModelInstancePool:
         req = PoolRequest(rid, model, np.asarray(prompt, np.int32), slo_ms,
                           max_new_tokens,
                           self.now() if submit_s is None else submit_s)
+        req.lifecycle = RequestLifecycle(rid, req.submit_s)
         heapq.heappush(self.queues[model],
                        (req.deadline_s, next(_seq), req))
         return rid
 
+    # ---- cancellation (docs/RUNTIME.md §11) ------------------------------
+    def _dequeue(self, model: str, request_id: int
+                 ) -> Optional[PoolRequest]:
+        """Remove ``request_id`` from the model's EDF queue EAGERLY
+        (swap-pop + re-heapify). Eager removal is what fixes queue-head
+        starvation on cancellation: a cancelled head used to sit in the
+        heap blocking FIFO admission of everything behind it until an
+        admission pass happened to reject it."""
+        q = self.queues[model]
+        for qi, (_, _, req) in enumerate(q):
+            if req.request_id == request_id:
+                q[qi] = q[-1]
+                q.pop()
+                heapq.heapify(q)
+                return req
+        return None
+
+    def cancel(self, request_id: int) -> Optional[PoolResult]:
+        """Tear down ``request_id`` wherever it lives — the EDF queue
+        (including a preempted snapshot awaiting re-admission), an
+        engine's waiting list, a mid-prefill slot, or a decoding slot —
+        freeing its blocks synchronously. Returns the cancelled
+        ``PoolResult`` (partial tokens included), or ``None`` when the
+        id is unknown or already terminal (cancel after finish is a
+        no-op: the race is inherent to streaming clients)."""
+        for model in self.queues:
+            req = self._dequeue(model, request_id)
+            if req is not None:
+                # a preempted snapshot carries its pre-eviction tokens
+                tokens = req.resume.seq_tokens[req.resume.base_len:] \
+                    if req.resume is not None else np.zeros((0,), np.int32)
+                return self._finish_cancel(req, None,
+                                           np.asarray(tokens, np.int32))
+        for inst in self.live():
+            for erid, req in list(inst.requests.items()):
+                if req.request_id != request_id:
+                    continue
+                r = inst.engine.cancel(erid)
+                if r is None:  # engine already finished it this step
+                    return None
+                inst.requests.pop(erid, None)
+                return self._finish_cancel(req, inst, r.tokens)
+        return None
+
+    def _finish_cancel(self, req: PoolRequest,
+                       inst: Optional["ModelInstance"],
+                       tokens: np.ndarray) -> PoolResult:
+        now = self.now()
+        res = PoolResult(req.request_id, req.model,
+                         inst.instance_id if inst is not None else -1,
+                         tokens, req.submit_s, req.admit_s, now,
+                         req.slo_ms, utility=0.0, cancelled=True,
+                         first_token_s=req.first_token_s)
+        self.n_cancelled += 1
+        self._results[req.model].append(res)
+        if req.lifecycle is not None and not req.lifecycle.terminal:
+            req.lifecycle.to(lifecycle.CANCELLED, now)
+        self._emit(req, "cancelled", tokens=[int(t) for t in tokens])
+        self._listeners.pop(req.request_id, None)
+        return res
+
     def queue_len(self, model: str) -> int:
         return len(self.queues[model])
+
+    def admission_headroom(self, model: str, prompt_len: int,
+                           max_new_tokens: int) -> Dict[str, float]:
+        """Backpressure signal for a front-end (docs/RUNTIME.md §11):
+        could a request of this shape start NOW, and if not, when is it
+        worth retrying? ``admissible_now`` is the engines' real admission
+        gate (free slot + reservable blocks under the slot cap);
+        ``retry_after_s`` prices the work queued ahead — prefill backlog
+        plus queued requests' footprints plus this request's own — with
+        the calibrated per-token iteration cost, falling back to a
+        queue-depth heuristic before calibration."""
+        cap = self.slot_caps[model]
+        admissible_now = any(
+            cap - i.n_resident > 0
+            and i.engine.admissible(prompt_len, max_new_tokens)
+            for i in self.running(model))
+        qdepth = len(self.queues[model])
+        backlog = self.prefill_backlog_tokens(model)
+        queued_tokens = sum(
+            (len(r.resume.seq_tokens) if r.resume is not None
+             else len(r.prompt)) + r.max_new_tokens
+            for _, _, r in self.queues[model])
+        work = backlog + queued_tokens
+        if not admissible_now:
+            work += prompt_len + max_new_tokens
+        base, per_tok = self.token_cost()
+        if per_tok > 0.0:
+            retry_s = (base + work * per_tok) / 1000.0
+        else:
+            retry_s = 0.05 * (1 + qdepth)
+        return {
+            "admissible_now": float(admissible_now),
+            "queue_depth": float(qdepth),
+            "backlog_tokens": float(backlog + queued_tokens),
+            "retry_after_s": float(min(max(retry_s, 0.05), 30.0)),
+        }
 
     def oldest_slack_ms(self, model: str) -> float:
         """Remaining SLO budget of the most urgent waiting request."""
@@ -634,6 +842,9 @@ class ModelInstancePool:
         vreq = inst.requests.pop(erid)
         vreq.resume = snapshot
         vreq.n_preempted += 1
+        if vreq.lifecycle is not None and not vreq.lifecycle.terminal:
+            vreq.lifecycle.to(lifecycle.QUEUED, now)  # DECODE -> QUEUED
+        self._emit(vreq, "preempted", instance_id=inst.instance_id)
         heapq.heappush(self.queues[model],
                        (vreq.deadline_s, next(_seq), vreq))
         self.n_preempted += 1
@@ -648,6 +859,13 @@ class ModelInstancePool:
                          req.slo_ms, utility=0.0, rejected=True)
         self.n_rejected += 1
         self._results[req.model].append(res)
+        # admission rejection is an EVENT, not a silent queue drop: a
+        # streaming front-end relays it instead of holding the client
+        # open against a request that will never run (docs/RUNTIME.md §11)
+        if req.lifecycle is not None and not req.lifecycle.terminal:
+            req.lifecycle.to(lifecycle.REJECTED, now)
+        self._emit(req, "rejected", slo_ms=req.slo_ms)
+        self._listeners.pop(req.request_id, None)
         return res
 
     def route(self) -> List[PoolResult]:
@@ -747,9 +965,10 @@ class ModelInstancePool:
         return rejected
 
     # ---- iteration -------------------------------------------------------
-    def _finish(self, inst: ModelInstance, erid: int,
-                tokens: np.ndarray) -> PoolResult:
-        req = inst.requests.pop(erid)
+    def _finish(self, inst: ModelInstance,
+                r: ContinuousResult) -> PoolResult:
+        req = inst.requests.pop(r.request_id)
+        tokens = r.tokens
         now = self.now()
         hist = self._results[req.model]
         # throughput term of Eq. 3: this model's completions per second
@@ -764,9 +983,27 @@ class ModelInstancePool:
                     req.slo_ms / 1000.0, max(1, self.m_c(req.model)))
         res = PoolResult(req.request_id, req.model, inst.instance_id,
                          tokens, req.submit_s, req.admit_s, now, req.slo_ms,
-                         utility=u)
+                         utility=u, first_token_s=req.first_token_s)
         inst.n_served += 1
         hist.append(res)
+        # client-observed timing aggregates (satellite of RUNTIME §11):
+        # recorded on the pool clock at completion, so they exist with or
+        # without an HTTP front-end in the loop
+        if res.first_token_s >= 0:
+            self.ttft_samples.append(res.ttft_ms)
+            if res.tpot_ms >= 0:
+                self.tpot_samples.append(res.tpot_ms)
+            if len(self.ttft_samples) > 2 * _SAMPLE_WINDOW:
+                del self.ttft_samples[:-_SAMPLE_WINDOW]
+            if len(self.tpot_samples) > 2 * _SAMPLE_WINDOW:
+                del self.tpot_samples[:-_SAMPLE_WINDOW]
+        if req.lifecycle is not None and not req.lifecycle.terminal:
+            req.lifecycle.to(lifecycle.FINISHED, now)
+        self._emit(req, "finished", tokens=[int(t) for t in tokens],
+                   latency_ms=res.latency_ms, utility=u,
+                   truncated=bool(r.truncated),
+                   n_preempted=int(r.n_preempted))
+        self._listeners.pop(req.request_id, None)
         return res
 
     def step(self) -> List[PoolResult]:
@@ -793,7 +1030,7 @@ class ModelInstancePool:
         t0 = time.perf_counter()
         for inst in busy:
             for r in inst.engine.step():
-                out.append(self._finish(inst, r.request_id, r.tokens))
+                out.append(self._finish(inst, r))
         iter_ms = (time.perf_counter() - t0) * 1000.0
         compiled = any(i.engine.last_step_compiled for i in busy)
         if not compiled:
@@ -906,7 +1143,10 @@ class ModelInstancePool:
         self.occupancy_samples = []
         self.token_samples = []
         self.tp_token_samples = {}
+        self.ttft_samples = []
+        self.tpot_samples = []
         self.n_rejected = 0
+        self.n_cancelled = 0
         self.n_preempted = 0
         self.preempts_by_model = {m: 0 for m in self.configs}
         self._last_preempt_step = {}
@@ -1030,14 +1270,19 @@ class ModelInstancePool:
         """Per-model serving metrics over the pool's lifetime."""
         out: Dict[str, Dict[str, float]] = {}
         for model, results in self._results.items():
-            served = [r for r in results if not r.rejected]
-            viol = sum(1 for r in results if r.violated)
+            # cancelled requests left on their client's initiative: they
+            # are reported, but neither served nor violated — attainment
+            # is over the requests the pool was actually asked to finish
+            considered = [r for r in results if not r.cancelled]
+            served = [r for r in considered if not r.rejected]
+            viol = sum(1 for r in considered if r.violated)
             lats = [r.latency_ms for r in served]
             out[model] = {
                 "served": float(len(served)),
-                "rejected": float(len(results) - len(served)),
+                "rejected": float(len(considered) - len(served)),
+                "cancelled": float(len(results) - len(considered)),
                 "violations": float(viol),
-                "slo_attainment": 1.0 - viol / max(1, len(results)),
+                "slo_attainment": 1.0 - viol / max(1, len(considered)),
                 "mean_latency_ms": float(np.mean(lats)) if lats else 0.0,
                 "mean_utility": float(np.mean(
                     [r.utility for r in served])) if served else 0.0,
@@ -1057,6 +1302,7 @@ class ModelInstancePool:
             "devices_in_use": float(self.devices_in_use()),
             "retired_instances": float(len(self.retired)),
             "n_rejected": float(self.n_rejected),
+            "n_cancelled": float(self.n_cancelled),
             "n_preempted": float(self.n_preempted),
             "prefill_backlog_tokens": float(self.prefill_backlog_tokens()),
             "contention_t1_ms": t1,
@@ -1064,6 +1310,16 @@ class ModelInstancePool:
             "token_base_ms": base,
             "token_per_ms": per_tok,
             "spec_accept_rate": self.spec_accept_rate(),
+            # client-observed timing percentiles over the trailing window
+            # (pool clock, HTTP-independent); 0.0 before any completion
+            "ttft_ms_p50": float(np.percentile(self.ttft_samples, 50))
+            if self.ttft_samples else 0.0,
+            "ttft_ms_p99": float(np.percentile(self.ttft_samples, 99))
+            if self.ttft_samples else 0.0,
+            "tpot_ms_p50": float(np.percentile(self.tpot_samples, 50))
+            if self.tpot_samples else 0.0,
+            "tpot_ms_p99": float(np.percentile(self.tpot_samples, 99))
+            if self.tpot_samples else 0.0,
         }
         if self.kv_layout == "paged" or self.kv_block_budget:
             out.update({f"kv_{k}": v for k, v in self.kv_occupancy().items()})

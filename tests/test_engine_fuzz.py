@@ -1,15 +1,16 @@
 """Randomized differential stress harness for the continuous engine
 (docs/ARCHITECTURE.md §5).
 
-Each seeded schedule interleaves submit / step / preempt-resume ops —
-plus live speculative-depth retuning on spec-capable variants — over
-a pool of mixed-length prompts with shared AND divergent prefixes,
-across engine variants (dense + paged layouts, prefix cache on/off,
-token budget on/off, tight block budgets that force LRU reclaim,
-speculative k up to 4 with mid-flight k toggling — paged variants run
-the FUSED prefill path, chunks attending the pool directly through
-block tables; the hybrid layer-family sweeps exercise the staging-cache
-round trip fused prefill cannot serve), and asserts:
+Each seeded schedule interleaves submit / step / preempt-resume /
+CANCEL ops — plus live speculative-depth retuning on spec-capable
+variants — over a pool of mixed-length prompts with shared AND
+divergent prefixes, across eight engine variants (dense + paged
+layouts, prefix cache on/off, token budget on/off in BOTH layouts —
+the dense+budget variant runs the staging-cache chunked-prefill path,
+paged+budget the fused one — tight block budgets that force LRU
+reclaim, speculative k up to 4 with mid-flight k toggling, and a
+kitchen-sink variant stacking prefix cache + tight blocks + budget +
+speculation), and asserts:
 
 * after EVERY operation — allocator conservation:
   ``n_free + n_cached + n_live == n_blocks`` (disjoint id sets),
@@ -20,6 +21,9 @@ round trip fused prefill cannot serve), and asserts:
   per-request uninterrupted oracle run (fresh single-slot dense engine,
   shared weights), regardless of how the schedule batched, preempted,
   chunked or block-shared it;
+* for EVERY cancelled request — whatever it emitted before the cancel
+  (at random phase: queued, mid-prefill, mid-decode, or preempted) is a
+  PREFIX of its oracle run, and the cancel never perturbs survivors;
 * after the drain — every reference returned (no leak, no double free).
 
 ``ENGINE_FUZZ_SCHEDULES`` sets the full-sweep schedule count (default
@@ -126,17 +130,18 @@ def _check_invariants(eng, ctx: str) -> None:
                 assert not eng.block_tables[i].any(), ctx
 
 
-N_VARIANTS = 6
+N_VARIANTS = 8
 
 
 def _engine_variant(cfg, variant: int):
     """Rotate the engine configurations the schedules exercise. Paged
-    variants (1-5) resolve ``prefill_mode="auto"`` to the FUSED path on
-    these all-linear configs — so the prefix-cache (2, 3) and
-    speculative (4, 5) variants prove token-identity of fused prefill
-    under preempt/resume/rollback interleavings. The hybrid
-    layer-family sweeps below cover the staging-cache round trip (the
-    non-fused path dense and hybrid layouts keep)."""
+    variants (1-5, 7) resolve ``prefill_mode="auto"`` to the FUSED path
+    on these all-linear configs — so the prefix-cache (2, 3, 7) and
+    speculative (4, 5, 7) variants prove token-identity of fused
+    prefill under preempt/resume/rollback/cancel interleavings. The
+    dense token-budget variant (6) and the hybrid layer-family sweeps
+    below cover the staging-cache round trip (the non-fused path dense
+    and hybrid layouts keep)."""
     if variant == 0:
         return ContinuousBatchingEngine(
             cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
@@ -171,12 +176,28 @@ def _engine_variant(cfg, variant: int):
             cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
             share_from=_template(cfg), kv_layout="paged", block_size=8,
             prefix_cache=bool(spec), **spec)
-    # tight budget + speculation: block rollback under LRU reclaim
-    # pressure and budget-degraded effective k
+    if variant == 5:
+        # tight budget + speculation: block rollback under LRU reclaim
+        # pressure and budget-degraded effective k
+        return ContinuousBatchingEngine(
+            cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
+            share_from=_template(cfg), kv_layout="paged", block_size=8,
+            kv_blocks=16, token_budget=12, **spec)
+    if variant == 6:
+        # dense + token budget: the STAGING-cache chunked-prefill path
+        # (fused prefill is paged-only), interleaved with preempt/
+        # resume/cancel at chunk boundaries
+        return ContinuousBatchingEngine(
+            cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
+            share_from=_template(cfg), token_budget=12)
+    # kitchen sink: prefix cache + tight blocks + token budget +
+    # speculation stacked — every reclaim/rollback/share path at once
+    kw = {"prefix_cache": True} if cfg.name in ("tiny", "tiny-tail") \
+        else {}
     return ContinuousBatchingEngine(
-        cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
+        cfg, max_slots=4, max_seq=MAX_SEQ, seed=0,
         share_from=_template(cfg), kv_layout="paged", block_size=8,
-        kv_blocks=16, token_budget=12, **spec)
+        kv_blocks=18, token_budget=12, **kw, **spec)
 
 
 def _run_schedule(cfg, seed: int) -> None:
@@ -185,6 +206,7 @@ def _run_schedule(cfg, seed: int) -> None:
     prompts = _prompt_pool(cfg)
     expected = {}
     results = {}
+    cancelled = set()
     ctx = f"cfg={cfg.name} seed={seed} variant={seed % N_VARIANTS}"
 
     def step_engine():
@@ -202,9 +224,22 @@ def _run_schedule(cfg, seed: int) -> None:
                 pass  # request larger than the whole pool: rejected
             else:
                 expected[rid] = (p, mn)
-        elif roll < 0.80:
+        elif roll < 0.75:
             step_engine()
-        elif roll < 0.90 and eng.spec_max > 0:
+        elif roll < 0.85:
+            # cancel a live request at whatever phase the schedule
+            # caught it in — queued, mid-prefill, mid-decode, or
+            # preempted-awaiting-resume; blocks must come back
+            # synchronously and survivors must not notice
+            live = sorted(set(expected) - set(results))
+            if live:
+                rid = rng.choice(live)
+                r = eng.cancel(rid)
+                assert r is not None and r.cancelled, \
+                    f"{ctx}: cancel({rid}) did not land"
+                results[rid] = r
+                cancelled.add(rid)
+        elif roll < 0.92 and eng.spec_max > 0:
             # the scheduler's fourth axis mid-flight: retune the live
             # proposal depth (speculate/verify/rollback must stay
             # token-identical at any k, switched at any boundary)
@@ -225,6 +260,16 @@ def _run_schedule(cfg, seed: int) -> None:
         f"{ctx}: lost requests {set(expected) - set(results)}"
     for rid, (p, mn) in expected.items():
         got = results[rid]
+        if rid in cancelled:
+            # a cancelled request keeps whatever it had emitted — which
+            # must be an oracle PREFIX (never a wrong token)
+            assert got.cancelled, f"{ctx} rid={rid}: lost cancel flag"
+            oracle = _oracle(cfg, p, mn)
+            assert len(got.tokens) <= len(oracle) and np.array_equal(
+                got.tokens, oracle[:len(got.tokens)]), \
+                f"{ctx} rid={rid}: cancelled emission not an oracle " \
+                f"prefix ({got.tokens} vs {oracle})"
+            continue
         assert not got.truncated, f"{ctx} rid={rid}: unexpected clamp"
         assert np.array_equal(got.tokens, _oracle(cfg, p, mn)), \
             f"{ctx} rid={rid}: tokens diverge from oracle " \
@@ -238,8 +283,9 @@ def _run_schedule(cfg, seed: int) -> None:
 
 def test_fuzz_smoke_schedules():
     """Tier-1 slice of the sweep: a handful of schedules covering every
-    variant of the canonical tiny model once — including both
-    speculative variants (seeds 4, 5)."""
+    variant of the canonical tiny model once — including the
+    speculative (4, 5), dense-staging (6) and kitchen-sink (7)
+    variants."""
     for seed in range(N_VARIANTS):
         _run_schedule(TINY, seed)
 
@@ -247,7 +293,7 @@ def test_fuzz_smoke_schedules():
 @pytest.mark.slow
 def test_fuzz_full_sweep_tiny():
     """The CI sweep: >= ENGINE_FUZZ_SCHEDULES seeded schedules (default
-    200) on the canonical model across all six engine variants."""
+    200) on the canonical model across all eight engine variants."""
     for seed in range(N_SCHEDULES):
         _run_schedule(TINY, seed)
 
