@@ -35,6 +35,7 @@ MODULES = [
     "fig_fused_kernels",
     "fig_sharded_engine",
     "fig_async_serving",
+    "fig_kv_offload",
     "roofline_table",
 ]
 

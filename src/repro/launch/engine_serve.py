@@ -221,6 +221,8 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
                kv_block_budget: Optional[int] = None,
                token_budget: Optional[int] = None,
                preemption: bool = False,
+               kv_host_blocks: int = 0,
+               preempt_mode: str = "auto",
                prefix_cache: bool = False,
                shared_prefix_tokens: int = 0,
                spec_k: int = 0
@@ -233,7 +235,9 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
     layout under a shared ``kv_block_budget`` (docs/RUNTIME.md §7).
     ``token_budget`` adds the per-iteration token cap as a third
     scheduler axis and ``preemption`` enables SLO-aware eviction
-    (docs/RUNTIME.md §8). ``prefix_cache`` shares full immutable prompt
+    (docs/RUNTIME.md §8). ``kv_host_blocks`` gives every paged instance
+    a host-memory KV tier so eviction can swap instead of recompute;
+    ``preempt_mode`` picks recompute/swap/auto (costed, per victim). ``prefix_cache`` shares full immutable prompt
     blocks across same-prefix sequences on pageable models, with router
     prefix affinity (docs/RUNTIME.md §7); pair it with
     ``shared_prefix_tokens`` so the generated workload is templated.
@@ -254,6 +258,8 @@ def serve_pool(models: Sequence[str] = ("qwen3-0.6b", "recurrentgemma-2b"),
                              kv_layout=kv_layout,
                              kv_block_budget=kv_block_budget,
                              preemption=preemption,
+                             kv_host_blocks=max(0, kv_host_blocks),
+                             preempt_mode=preempt_mode,
                              prefix_cache=prefix_cache,
                              spec_k=spec_k)
     per_model_mc = max(1, max_instances // max(1, len(cfgs)))
@@ -400,7 +406,8 @@ def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
          max_instances: int = 4, kv_layout: str = "dense",
          kv_block_budget: Optional[int] = None,
          token_budget: Optional[int] = None,
-         preemption: bool = False, prefix_cache: bool = False,
+         preemption: bool = False, kv_host_blocks: int = 0,
+         preempt_mode: str = "auto", prefix_cache: bool = False,
          shared_prefix_tokens: float = 0.0, spec_k: int = 0,
          serve_http_port: Optional[int] = None,
          backpressure: bool = True, max_queue_depth: int = 8) -> None:
@@ -419,6 +426,8 @@ def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
                    max_instances=max_instances, kv_layout=kv_layout,
                    kv_block_budget=kv_block_budget,
                    token_budget=token_budget, preemption=preemption,
+                   kv_host_blocks=kv_host_blocks,
+                   preempt_mode=preempt_mode,
                    prefix_cache=prefix_cache,
                    shared_prefix_tokens=int(shared_prefix_tokens),
                    spec_k=spec_k)
@@ -434,10 +443,11 @@ def main(exec_mode: str = "round", arch: str = "qwen3-0.6b",
         if kv_layout != "dense":
             print("round mode always uses the dense per-round cache; "
                   "--kv-layout applies to continuous/pool serving")
-        if token_budget or preemption or prefix_cache or spec_k:
+        if token_budget or preemption or prefix_cache or spec_k \
+                or kv_host_blocks:
             print("chunked prefill / preemption / prefix caching / "
-                  "speculation are continuous-engine features; "
-                  "ignored in round mode")
+                  "speculation / KV offload are continuous-engine "
+                  "features; ignored in round mode")
         serve_round(arch, duration_s, rps, slo_ms)
 
 

@@ -64,6 +64,21 @@ def main() -> None:
                     help="SLO-aware preemption: evict the largest-slack "
                          "resident when an urgent request cannot be "
                          "admitted (docs/RUNTIME.md §8)")
+    ap.add_argument("--kv-host-blocks", type=int, default=0,
+                    help="host-memory KV block tier per paged engine "
+                         "instance: preempted sequences can swap their "
+                         "blocks to host instead of recomputing, and "
+                         "the prefix cache spills cold blocks there "
+                         "before invalidating (docs/RUNTIME.md §8). "
+                         "Default: 0 (no host tier)")
+    ap.add_argument("--preempt-mode", default="auto",
+                    choices=["auto", "recompute", "swap"],
+                    help="preemption eviction mode: recompute frees KV "
+                         "and re-prefills on resume, swap moves it to "
+                         "the host tier (needs --kv-host-blocks), auto "
+                         "prices both with the calibrated token-cost "
+                         "and swap-bandwidth fits and picks the "
+                         "cheaper per victim (docs/RUNTIME.md §8)")
     ap.add_argument("--prefill-tokens", type=float, default=0.0,
                     help="simulator: mean prompt tokens per request "
                          "(geometric; 0 = single-shot, no prefill "
@@ -112,6 +127,12 @@ def main() -> None:
     if args.serve_http and not args.engine:
         ap.error("--serve-http requires --engine (the HTTP front-end "
                  "streams real engine tokens)")
+    if args.kv_host_blocks and args.kv_layout != "paged":
+        ap.error("--kv-host-blocks needs --kv-layout paged (the host "
+                 "tier holds KV blocks)")
+    if args.preempt_mode == "swap" and args.kv_host_blocks <= 0:
+        ap.error("--preempt-mode swap needs --kv-host-blocks > 0 "
+                 "(there is nowhere to swap to)")
 
     if args.engine:
         from repro.launch import engine_serve
@@ -123,6 +144,8 @@ def main() -> None:
                           kv_block_budget=args.kv_block_budget,
                           token_budget=args.token_budget,
                           preemption=args.preemption,
+                          kv_host_blocks=max(0, args.kv_host_blocks),
+                          preempt_mode=args.preempt_mode,
                           prefix_cache=args.prefix_cache,
                           shared_prefix_tokens=args.shared_prefix_tokens,
                           spec_k=max(0, args.spec_k),

@@ -192,8 +192,12 @@ def run_episode(env: EdgeServingEnv, agent,
 #:  log1p(prefill backlog tokens), log1p(preemptions since last decision),
 #:  prefix-cache hit rate (0.0 for dense / cache-off pools),
 #:  speculative acceptance rate (0.0 for spec-off pools),
-#:  shared-device-set utilization (0.0 for unbudgeted pools)]
-POOL_STATE_DIM = 12
+#:  shared-device-set utilization (0.0 for unbudgeted pools),
+#:  host-tier occupancy frac (swapped + spilled blocks over the host
+#:  pool; 0.0 for pools without a KV offload tier) — the agent sees
+#:  how much preempted/cold state is parked off-device, i.e. how
+#:  cheap further preemption currently is (docs/RUNTIME.md §8)]
+POOL_STATE_DIM = 13
 
 
 def tp_collective_ms_per_token(model_cfg, tp_degree: int) -> float:
@@ -299,6 +303,7 @@ class PoolScheduler:
             min(1.0, max(0.0, float(p.spec_accept_rate()))),
             min(1.0, p.devices_in_use() / p.n_devices)
             if getattr(p, "n_devices", None) else 0.0,
+            min(1.0, max(0.0, float(occ.get("host_frac", 0.0)))),
         ], np.float32)
 
     def _kv_feasible(self, model: str, b: int, m_c: int) -> bool:

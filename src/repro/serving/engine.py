@@ -288,11 +288,33 @@ class BlockAllocator:
     on a double free (more ``free``s than the refcount ever granted) or
     a duplicate id within one call — a silently re-freed id would hand
     the same physical block to two sequences.
+
+    Host tier (``host_blocks > 0``, docs/ARCHITECTURE.md §5): a second
+    id space 1..host_blocks of host-memory blocks the engine can swap
+    KV into. Two populations share it, under one LRU discipline that
+    spans both tiers:
+      * *swapped* blocks (``_host_live``) — a preempted sequence's KV,
+        owned by its ``PreemptedRequest`` snapshot until resume or
+        cancel frees them (never reclaimed underneath the owner);
+      * *spilled* blocks (``_host_lru`` / ``_host_cache``) — refcount-0
+        prefix-cache blocks that would otherwise be invalidated by
+        device-LRU reclaim; their cache entry moves to the host tier
+        instead, and a later ``acquire`` revives them back to a device
+        block (``unspill_fn`` copies the bytes). Spilled entries are
+        reclaimable (oldest first) when the host tier itself fills.
+    Host conservation mirrors the device invariant:
+    ``n_host_free + n_host_cached + n_host_live == n_host_blocks``.
+    The allocator is pure bookkeeping — the engine provides
+    ``spill_fn(device_id, host_id)`` / ``unspill_fn(host_id, device_id)``
+    hooks that move the actual bytes.
     """
 
-    def __init__(self, n_blocks: int, block_size: int):
+    def __init__(self, n_blocks: int, block_size: int,
+                 host_blocks: int = 0):
         if n_blocks < 1:
             raise ValueError("need at least one usable block")
+        if host_blocks < 0:
+            raise ValueError(f"host_blocks must be >= 0, got {host_blocks}")
         self.n_blocks = n_blocks
         self.block_size = block_size
         self._free = list(range(n_blocks, 0, -1))  # pop() -> low ids first
@@ -305,6 +327,22 @@ class BlockAllocator:
         self._lru: "OrderedDict[int, None]" = OrderedDict()
         self.n_reserved = 0
         self.n_reclaimed = 0    # cached blocks evicted under pressure
+        # ---- host tier ----
+        self.n_host_blocks = host_blocks
+        self._host_free = list(range(host_blocks, 0, -1))
+        self._host_live: Set[int] = set()         # swapped sequence KV
+        self._host_cache: Dict[str, int] = {}     # spilled prefix blocks
+        self._host_key: Dict[int, str] = {}
+        self._host_lru: "OrderedDict[int, None]" = OrderedDict()
+        #: engine-provided byte movers; None = host tier is inert (the
+        #: device LRU falls back to plain invalidation on reclaim)
+        self.spill_fn: Optional[Callable[[int, int], None]] = None
+        self.unspill_fn: Optional[Callable[[int, int], None]] = None
+        self.n_spilled = 0      # device LRU entries demoted to host
+        self.n_unspilled = 0    # host entries revived to device
+        self.n_host_reclaimed = 0  # spilled entries evicted under pressure
+        self.n_swapped_out = 0  # sequence blocks swapped device -> host
+        self.n_swapped_in = 0   # sequence blocks swapped host -> device
 
     @property
     def n_free(self) -> int:
@@ -328,6 +366,71 @@ class BlockAllocator:
         (evicted-but-cached LRU blocks are reclaimable, so they count)."""
         return len(self._free) + len(self._lru) - self.n_reserved
 
+    # ---- host tier (docs/ARCHITECTURE.md §5) -----------------------------
+    @property
+    def n_host_free(self) -> int:
+        return len(self._host_free)
+
+    @property
+    def n_host_cached(self) -> int:
+        """Spilled prefix blocks parked in the host LRU — reclaimable."""
+        return len(self._host_lru)
+
+    @property
+    def n_host_live(self) -> int:
+        """Host blocks owned by swapped (preempted) sequences — pinned
+        until their snapshot resumes or is cancelled."""
+        return len(self._host_live)
+
+    @property
+    def n_host_available(self) -> int:
+        """Host blocks a swap-out could claim right now: free plus
+        reclaimable spilled entries (live swapped blocks are never
+        reclaimed underneath their owner)."""
+        return len(self._host_free) + len(self._host_lru)
+
+    def _host_alloc(self) -> Optional[int]:
+        """One host block: free list first, then reclaim the oldest
+        spilled entry (its cache key is invalidated — the spanning LRU's
+        final eviction). None when every host block is swap-pinned."""
+        if self._host_free:
+            return self._host_free.pop()
+        if self._host_lru:
+            hid, _ = self._host_lru.popitem(last=False)
+            key = self._host_key.pop(hid)
+            del self._host_cache[key]
+            self.n_host_reclaimed += 1
+            return hid
+        return None
+
+    def swap_out_alloc(self, n: int) -> Optional[List[int]]:
+        """Claim ``n`` host blocks for a preempted sequence's KV (the
+        swap-out side of ``preempt(mode="swap")``). All-or-nothing:
+        None when fewer than ``n`` are available."""
+        if self.n_host_available < n:
+            return None
+        ids = []
+        for _ in range(n):
+            hid = self._host_alloc()
+            assert hid is not None
+            self._host_live.add(hid)
+            ids.append(hid)
+        self.n_swapped_out += n
+        return ids
+
+    def host_free(self, ids: List[int]) -> None:
+        """Release a swap snapshot's host blocks (resume landed, or the
+        request was cancelled). Same double-free discipline as ``free``."""
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate host block ids in host_free: {ids}")
+        for i in ids:
+            if i not in self._host_live:
+                raise ValueError(
+                    f"host_free of block {i}: not currently swapped out")
+        for i in ids:
+            self._host_live.discard(i)
+            self._host_free.append(i)
+
     def blocks_for(self, n_tokens: int) -> int:
         return -(-max(0, n_tokens) // self.block_size)
 
@@ -347,12 +450,24 @@ class BlockAllocator:
         self.n_reserved -= n
 
     def _reclaim_lru(self) -> int:
-        """Evict the least-recently-parked cached block: its cache entry
-        is invalidated and the id behaves like a fresh free block."""
+        """Evict the least-recently-parked cached block. With a host
+        tier attached (``spill_fn`` set) the cache entry is demoted to a
+        host block instead of invalidated — the device LRU spills into
+        the host LRU, one eviction chain spanning both tiers; without
+        one (or when the host tier is swap-pinned full) the entry is
+        invalidated and the id behaves like a fresh free block."""
         bid, _ = self._lru.popitem(last=False)
         key = self._block_key.pop(bid)
         del self._cache[key]
         self.n_reclaimed += 1
+        if self.spill_fn is not None:
+            hid = self._host_alloc()
+            if hid is not None:
+                self.spill_fn(bid, hid)
+                self._host_cache[key] = hid
+                self._host_key[hid] = key
+                self._host_lru[hid] = None
+                self.n_spilled += 1
         return bid
 
     def alloc_reserved(self) -> int:
@@ -397,7 +512,9 @@ class BlockAllocator:
 
     # ---- prefix cache (docs/ARCHITECTURE.md §5) --------------------------
     def cached(self, key: str) -> bool:
-        return key in self._cache
+        """True when either tier holds ``key`` — a spilled host entry is
+        still a hit (``acquire`` revives it to a device block)."""
+        return key in self._cache or key in self._host_cache
 
     def cached_live(self, key: str) -> bool:
         """True when ``key``'s block is currently mapped by a live
@@ -413,6 +530,13 @@ class BlockAllocator:
         assert bid in self._outstanding, f"register of non-live block {bid}"
         if key in self._cache or bid in self._block_key:
             return
+        if key in self._host_cache:
+            # a live device copy supersedes the spilled one: drop the
+            # host entry so every key names exactly one physical block
+            hid = self._host_cache.pop(key)
+            del self._host_key[hid]
+            self._host_lru.pop(hid, None)
+            self._host_free.append(hid)
         self._cache[key] = bid
         self._block_key[bid] = key
 
@@ -421,19 +545,42 @@ class BlockAllocator:
         refcount+1 for a live block (costs nothing), revival for an
         LRU-parked one (consumes one available block — refused when
         every remaining block is already promised to a reservation).
-        Returns the block id, or None on a miss."""
+        Returns the block id, or None on a miss. A key whose block was
+        spilled to the host tier is revived: a fresh device block is
+        claimed (free list, else device-LRU reclaim), ``unspill_fn``
+        copies the bytes back, and the cache entry moves home — also
+        refused when every available block is promised."""
         bid = self._cache.get(key)
-        if bid is None:
-            return None
-        if bid in self._outstanding:
-            self._refcount[bid] += 1
+        if bid is not None:
+            if bid in self._outstanding:
+                self._refcount[bid] += 1
+                return bid
+            # revive from the LRU pool; guard the reservation promise
+            if self.n_available < 1:
+                return None
+            del self._lru[bid]
+            self._outstanding.add(bid)
+            self._refcount[bid] = 1
             return bid
-        # revive from the LRU pool; guard the reservation promise
+        hid = self._host_cache.get(key)
+        if hid is None or self.unspill_fn is None:
+            return None
         if self.n_available < 1:
             return None
-        del self._lru[bid]
+        # detach the host entry FIRST: claiming the device block below
+        # can itself reclaim-and-spill, and must not be able to evict
+        # the very entry being revived
+        del self._host_cache[key]
+        del self._host_key[hid]
+        del self._host_lru[hid]
+        bid = self._free.pop() if self._free else self._reclaim_lru()
+        self.unspill_fn(hid, bid)
+        self._host_free.append(hid)
         self._outstanding.add(bid)
         self._refcount[bid] = 1
+        self._cache[key] = bid
+        self._block_key[bid] = key
+        self.n_unspilled += 1
         return bid
 
 
@@ -488,12 +635,26 @@ class _Slot:
 
 @dataclasses.dataclass
 class PreemptedRequest:
-    """Resumable snapshot of a preempted sequence (recompute-on-resume,
-    docs/RUNTIME.md §8): the padded prompt plus every token emitted so
-    far, re-prefilled in chunks on resume so greedy output is
-    token-identical to an uninterrupted run."""
+    """Resumable snapshot of a preempted sequence (docs/RUNTIME.md §8).
+
+    Two flavours, distinguished by ``host_blocks``:
+
+    * **recompute** (``host_blocks is None``): ``seq_tokens`` holds the
+      padded prompt plus every token emitted so far, re-prefilled in
+      chunks on resume — greedy output is token-identical to an
+      uninterrupted run.
+    * **swap** (``preempt(mode="swap")``): the sequence's KV blocks were
+      copied to the allocator's host tier instead of discarded.
+      ``seq_tokens`` stays the original padded prompt; the emitted
+      tokens, decode position and pending token are carried verbatim so
+      resume re-maps the blocks onto fresh device ids and continues
+      decoding with NO recompute. The snapshot owns its host blocks
+      until resume or cancel, and is pinned to the engine whose host
+      pool holds them (``host_engine_id``) — ``release_swap`` converts
+      it back to a recompute snapshot when that engine goes away.
+    """
     request_id: int
-    seq_tokens: np.ndarray      # padded prompt + emitted tokens so far
+    seq_tokens: np.ndarray      # padded prompt (+ emitted, recompute only)
     base_len: int               # emitted tokens = seq_tokens[base_len:]
     max_new: int                # tokens still to emit
     submit_s: float
@@ -501,12 +662,44 @@ class PreemptedRequest:
     truncated: bool
     n_preempted: int
     first_token_s: float = -1.0
+    # ---- swap-mode state (None/unused for recompute snapshots) ----
+    tokens: Optional[List[int]] = None   # emitted tokens (swap carries
+    #                                      them outside seq_tokens)
+    pos: int = -1                        # decode frontier at preemption
+    pending_tok: int = 0                 # sampled-but-unwritten token
+    host_blocks: Optional[List[int]] = None
+    host_engine_id: int = 0              # id() of the owning engine
+
+    @property
+    def swapped(self) -> bool:
+        return self.host_blocks is not None
+
+
+def to_recompute(req: PreemptedRequest) -> PreemptedRequest:
+    """Rebuild a swap snapshot as a recompute snapshot WITHOUT touching
+    any allocator — for callers whose owning engine is already retired
+    (its host pool, blocks included, died with it). Token identity
+    holds: the recompute context is the padded prompt plus the emitted
+    tokens, and greedy re-prefill regenerates the dropped pending token
+    deterministically. Prefer ``engine.release_swap`` while the engine
+    is alive — it returns the host blocks properly."""
+    if not req.swapped:
+        return req
+    seq = np.concatenate([req.seq_tokens,
+                          np.asarray(req.tokens, np.int32)])
+    return PreemptedRequest(
+        req.request_id, seq, base_len=req.base_len, max_new=req.max_new,
+        submit_s=req.submit_s, requested_new=req.requested_new,
+        truncated=req.truncated, n_preempted=req.n_preempted,
+        first_token_s=req.first_token_s)
 
 
 @dataclasses.dataclass
 class _WaitingReq:
-    """One queued admission: a fresh prompt, or (``prepadded``) a
-    preempted sequence whose bucket padding is already baked in."""
+    """One queued admission: a fresh prompt, (``prepadded``) a preempted
+    sequence whose bucket padding is already baked in, or (``swap``) a
+    swap-mode snapshot whose KV waits in the host tier — admitted
+    straight to DECODE, no prefill."""
     request_id: int
     prompt: np.ndarray
     max_new: int
@@ -517,6 +710,7 @@ class _WaitingReq:
     truncated: bool = False
     n_preempted: int = 0
     first_token_s: float = -1.0
+    swap: Optional[PreemptedRequest] = None
 
 
 @dataclasses.dataclass
@@ -595,7 +789,7 @@ class ContinuousBatchingEngine:
                  max_seq: int = 256, dtype=jnp.float32, seed: int = 0,
                  share_from: "ContinuousBatchingEngine" = None,
                  kv_layout: str = "dense", block_size: int = 16,
-                 kv_blocks: int = None,
+                 kv_blocks: int = None, kv_host_blocks: int = 0,
                  token_budget: Optional[int] = None,
                  prefix_cache: bool = False,
                  spec_k: int = 0, spec_ngram: int = 2,
@@ -751,6 +945,24 @@ class ContinuousBatchingEngine:
                 self._prefill_chunk = None
                 self._decode = None
                 self._verify = None
+        if kv_host_blocks < 0:
+            raise ValueError(
+                f"kv_host_blocks must be >= 0, got {kv_host_blocks}")
+        if kv_host_blocks > 0:
+            if kv_layout != "paged":
+                raise ValueError(
+                    "kv_host_blocks needs kv_layout='paged' (the host "
+                    "tier swaps block-granular KV)")
+            if mesh is not None:
+                raise ValueError(
+                    "the host KV tier is single-device for now: swap-in "
+                    "writes outside jit would drop the pool's sharding")
+        self.kv_host_blocks = kv_host_blocks
+        #: host-tier stack gate: swapping a sequence (or spilling a
+        #: prefix block) moves ONLY block-pool state, so every layer's
+        #: decode state must live there — the same all-linear predicate
+        #: prefix caching needs. Hybrid stacks keep recompute-on-resume.
+        self.swap_ok = kv_host_blocks > 0 and supports_prefix_cache(cfg)
         if kv_layout == "paged":
             self.block_size = block_size
             self.blocks_per_slot = -(-self.cache_len // block_size)
@@ -758,17 +970,25 @@ class ContinuousBatchingEngine:
                 # dense-equivalent worst case: admission can never refuse
                 # a request the dense layout would have taken
                 kv_blocks = self.n_slots * self.blocks_per_slot
-            self.allocator = BlockAllocator(kv_blocks, block_size)
+            self.allocator = BlockAllocator(kv_blocks, block_size,
+                                            host_blocks=kv_host_blocks)
             # pool array includes the null block 0 (id range 0..kv_blocks)
             self.cache = self.model.init_paged_cache(
                 self.n_slots, self.cache_len, kv_blocks + 1, block_size,
                 dtype)
             self.block_tables = np.zeros(
                 (self.n_slots, self.blocks_per_slot), np.int32)
+            if self.swap_ok:
+                self.host_pool = self._make_host_pool()
+                self.allocator.spill_fn = self._spill_block
+                self.allocator.unspill_fn = self._unspill_block
+            else:
+                self.host_pool = None
         else:
             self.block_size = 0
             self.allocator = None
             self.block_tables = None
+            self.host_pool = None
             # speculative verify writes up to spec_max rows past a slot's
             # frontier before acceptance is known; dynamic_update_slice
             # CLAMPS out-of-bounds starts (it would silently overwrite
@@ -812,6 +1032,13 @@ class ContinuousBatchingEngine:
         self.n_evicted = 0
         self.n_preempted = 0
         self.n_cancelled = 0
+        #: host-tier accounting (docs/ARCHITECTURE.md §5): swap-mode
+        #: preempts/resumes, and observed transfers as (bytes, ms)
+        #: samples — the pool's swap-bandwidth calibration reads these
+        #: (latency_model.fit_swap_cost)
+        self.n_swap_preempts = 0
+        self.n_swap_resumes = 0
+        self.swap_samples: List[Tuple[int, float]] = []
         #: push-mode lifecycle hooks (docs/RUNTIME.md §11). Both fire
         #: synchronously inside engine calls, so handlers must be cheap
         #: and must not reenter the engine.
@@ -886,6 +1113,8 @@ class ContinuousBatchingEngine:
         backlog = sum(len(s.seq_tokens) - s.prefill_pos
                       for s in self.slots if s.prefilling)
         for w in self.waiting:
+            if w.swap is not None:
+                continue  # swap resumes re-map blocks, zero prefill
             backlog += len(w.prompt) if w.prepadded else \
                 self._frontend_tokens() + _bucket(len(w.prompt),
                                                   buckets=SEQ_BUCKETS)
@@ -911,7 +1140,12 @@ class ContinuousBatchingEngine:
 
     def resume_blocks(self, req: PreemptedRequest) -> int:
         """Worst-case blocks a preempted sequence reserves on resume:
-        its already-padded context plus the tokens still to emit."""
+        its already-padded context plus the tokens still to emit. For a
+        swap snapshot that is frontier + remaining — numerically the
+        same footprint (``pos + max_new`` is invariant along a decode),
+        just derived from the carried position."""
+        if req.swapped:
+            return self.allocator.blocks_for(req.pos + req.max_new)
         return self.allocator.blocks_for(
             len(req.seq_tokens) + req.max_new)
 
@@ -937,7 +1171,10 @@ class ContinuousBatchingEngine:
             return True
         if resume is not None:
             need = self.resume_blocks(resume)
-            if self.prefix_cache:
+            # swap resumes never map shared prefix blocks (their KV
+            # comes back from the host tier wholesale), so the sharing
+            # discount applies to recompute snapshots only
+            if self.prefix_cache and not resume.swapped:
                 need -= self._live_shared_blocks_prepadded(
                     resume.seq_tokens)
         else:
@@ -996,6 +1233,10 @@ class ContinuousBatchingEngine:
             raise NotImplementedError(
                 "preemption-resume needs the chunked-prefill path "
                 "(plain token prompts)")
+        if req.swapped and req.host_engine_id != id(self):
+            raise ValueError(
+                "swap snapshot is pinned to the engine holding its host "
+                "blocks; release_swap() it there to resume elsewhere")
         rid = self._next_id
         self._next_id += 1
         self.waiting.append(_WaitingReq(
@@ -1003,7 +1244,8 @@ class ContinuousBatchingEngine:
             req.submit_s, prepadded=True, base_len=req.base_len,
             requested_new=req.requested_new, truncated=req.truncated,
             n_preempted=req.n_preempted,
-            first_token_s=req.first_token_s))
+            first_token_s=req.first_token_s,
+            swap=req if req.swapped else None))
         return rid
 
     # ---- prefix cache (docs/ARCHITECTURE.md §5) --------------------------
@@ -1116,6 +1358,125 @@ class ContinuousBatchingEngine:
                                 for c in self.cache["tail"])
         self.cache = new
 
+    # ---- host KV tier: swap data plane (docs/ARCHITECTURE.md §5) ---------
+    def _make_host_pool(self) -> Dict:
+        """Pinned-host mirror of the paged pool: one numpy array per
+        paged k/v leaf with the block axis resized to
+        ``kv_host_blocks + 1`` (host ids 1.. index it directly; row 0 is
+        dead, mirroring the device null block). Only built for
+        fully-pageable stacks (``swap_ok``), so every layer is paged."""
+        def mirror(c, stacked: bool):
+            out = {}
+            for key in ("k", "v"):
+                p = c[key]
+                shp = (p.shape[0], self.kv_host_blocks + 1) + p.shape[2:] \
+                    if stacked else \
+                    (self.kv_host_blocks + 1,) + p.shape[1:]
+                out[key] = np.zeros(shp, p.dtype)
+            return out
+
+        hp: Dict = {}
+        if "units" in self.cache:
+            hp["units"] = tuple(mirror(c, stacked=True)
+                                for c in self.cache["units"])
+        if "tail" in self.cache:
+            hp["tail"] = tuple(mirror(c, stacked=False)
+                               for c in self.cache["tail"])
+        return hp
+
+    @property
+    def swap_bytes_per_block(self) -> int:
+        """Bytes one block occupies across every paged layer's k+v —
+        the unit the swap-cost fit is priced in."""
+        if self.host_pool is None:
+            return 0
+        n = 0
+        for c in self.host_pool.get("units", ()):
+            for key in ("k", "v"):
+                p = c[key]
+                n += p[:, 0].nbytes
+        for c in self.host_pool.get("tail", ()):
+            for key in ("k", "v"):
+                n += c[key][0].nbytes
+        return n
+
+    def _swap_out_blocks(self, dev_ids: List[int],
+                         host_ids: List[int]) -> None:
+        """Copy physical pool blocks ``dev_ids`` into host blocks
+        ``host_ids``: one fused gather + ``jax.device_get`` per layer
+        (batched over the whole block run, not per block). The
+        device_get blocks until the transfer lands, so the recorded
+        (bytes, ms) sample measures true device->host bandwidth."""
+        t0 = time.perf_counter()
+        didx = jnp.asarray(dev_ids, jnp.int32)
+        hidx = np.asarray(host_ids, np.int64)
+        n_bytes = 0
+        def pull(c, hpc, stacked: bool):
+            nonlocal n_bytes
+            for key in ("k", "v"):
+                pool = c[key]
+                g = pool[:, didx] if stacked else pool[didx]
+                arr = np.asarray(jax.device_get(g))
+                n_bytes += arr.nbytes
+                if stacked:
+                    hpc[key][:, hidx] = arr
+                else:
+                    hpc[key][hidx] = arr
+
+        for c, hpc in zip(self.cache.get("units", ()),
+                          self.host_pool.get("units", ())):
+            pull(c, hpc, stacked=True)
+        for c, hpc in zip(self.cache.get("tail", ()),
+                          self.host_pool.get("tail", ())):
+            pull(c, hpc, stacked=False)
+        self.swap_samples.append(
+            (n_bytes, (time.perf_counter() - t0) * 1e3))
+
+    def _swap_in_blocks(self, host_ids: List[int],
+                        dev_ids: List[int]) -> None:
+        """Copy host blocks back into freshly allocated device blocks:
+        one ``device_put`` + scatter per layer, DISPATCHED without
+        blocking (jax async dispatch) — the copy overlaps the admission
+        bookkeeping and whatever else runs before the next forward
+        touches the pool, which is the swap-in-ahead-of-resume the
+        scheduler's pricing assumes."""
+        t0 = time.perf_counter()
+        didx = jnp.asarray(dev_ids, jnp.int32)
+        hidx = np.asarray(host_ids, np.int64)
+        n_bytes = 0
+        def push(c, hpc, stacked: bool):
+            nonlocal n_bytes
+            out = dict(c)
+            for key in ("k", "v"):
+                rows = hpc[key][:, hidx] if stacked else hpc[key][hidx]
+                n_bytes += rows.nbytes
+                out[key] = c[key].at[:, didx].set(rows) if stacked \
+                    else c[key].at[didx].set(rows)
+            return out
+
+        new: Dict = {}
+        if "units" in self.cache:
+            new["units"] = tuple(
+                push(c, hpc, stacked=True)
+                for c, hpc in zip(self.cache["units"],
+                                  self.host_pool["units"]))
+        if "tail" in self.cache:
+            new["tail"] = tuple(
+                push(c, hpc, stacked=False)
+                for c, hpc in zip(self.cache["tail"],
+                                  self.host_pool["tail"]))
+        self.cache = new
+        self.swap_samples.append(
+            (n_bytes, (time.perf_counter() - t0) * 1e3))
+
+    def _spill_block(self, bid: int, hid: int) -> None:
+        """Allocator spill hook: demote one reclaimed prefix block."""
+        self._swap_out_blocks([bid], [hid])
+
+    def _unspill_block(self, hid: int, bid: int) -> None:
+        """Allocator revival hook: promote one spilled prefix block."""
+        self._swap_in_blocks([hid], [bid])
+
     def _graft(self, one_cache, slot: int, block_ids=None,
                skip_blocks: int = 0) -> None:
         """Scatter a freshly-prefilled single-sequence cache into the
@@ -1195,6 +1556,11 @@ class ContinuousBatchingEngine:
         free = self.free_slots
         while self.waiting and free:
             w = self.waiting[0]
+            if w.swap is not None:
+                if not self._admit_swap(w, free):
+                    break  # FIFO: head of queue blocks on memory
+                n += 1
+                continue
             if w.prepadded:
                 seq = w.prompt
                 base_len = w.base_len
@@ -1293,6 +1659,56 @@ class ContinuousBatchingEngine:
             self.n_admitted += 1
             n += 1
         return n
+
+    def _admit_swap(self, w: _WaitingReq, free: List[int]) -> bool:
+        """Admit a swap-mode resume from the head of the queue: reserve
+        the full remaining footprint, immediately convert the swapped
+        portion into fresh device blocks, dispatch the host->device copy
+        (async — jax dispatch returns before the transfer lands, and the
+        next forward orders after it), release the host blocks, and hand
+        the slot straight to the decode loop at its carried frontier.
+        NO prefill happens: this is the whole point of the swap tier.
+        Returns False (leaving the queue untouched) when the reservation
+        cannot be met — the FIFO head blocks on memory, same as a fresh
+        admission."""
+        req = w.swap
+        need = self.allocator.blocks_for(req.pos + req.max_new)
+        if not self.allocator.reserve(need):
+            return False
+        self.waiting.pop(0)
+        slot = free.pop(0)
+        n_have = len(req.host_blocks)
+        ids = [self.allocator.alloc_reserved() for _ in range(n_have)]
+        self._swap_in_blocks(req.host_blocks, ids)
+        self.allocator.host_free(req.host_blocks)
+        self.block_tables[slot, :n_have] = ids
+        # prefill_pos == len(seq_tokens): the slot is DECODING from the
+        # first step — the re-mapped blocks already hold rows [0, pos)
+        self.slots[slot] = _Slot(
+            request_id=w.request_id, remaining=req.max_new,
+            n_emitted=len(req.tokens), tokens=list(req.tokens),
+            submit_s=req.submit_s, admit_s=self._now(), blocks=ids,
+            n_outstanding=need - n_have, n_shared=0,
+            seq_tokens=np.asarray(req.seq_tokens, np.int32),
+            base_len=req.base_len, prefill_pos=len(req.seq_tokens),
+            requested_new=req.requested_new, truncated=req.truncated,
+            n_preempted=req.n_preempted, first_token_s=req.first_token_s)
+        self.pos[slot] = req.pos
+        self.pending_tok[slot] = req.pending_tok
+        if self.prefix_cache:
+            # the prompt chain came back bit-identical: re-publish any
+            # full prompt blocks whose keys fell out of both tiers while
+            # the sequence was swapped out (first writer wins, so keys
+            # still cached elsewhere are untouched)
+            for i, key in enumerate(self._chain_keys(
+                    self.slots[slot].seq_tokens)):
+                if i < n_have:
+                    self.allocator.register(key, ids[i])
+        self.n_admitted += 1
+        self.n_swap_resumes += 1
+        if self.on_state is not None:
+            self.on_state(w.request_id, "decode")
+        return True
 
     def _admit_inline(self, w: _WaitingReq, slot: int,
                       reserved: int) -> None:
@@ -1425,17 +1841,43 @@ class ContinuousBatchingEngine:
             out.append((i, s.request_id, freeable))
         return out
 
-    def preempt(self, slot: int, requeue: bool = True) -> PreemptedRequest:
+    def can_swap(self, slot: int) -> bool:
+        """Could the sequence in ``slot`` be preempted with
+        ``mode="swap"`` right now? Needs the host tier (``swap_ok``:
+        configured AND every layer's decode state in the block pool) and
+        enough available host blocks to hold the slot's KV."""
+        if not self.swap_ok:
+            return False
+        s = self.slots[slot]
+        return s.active and not s.prefilling \
+            and self.allocator.n_host_available >= len(s.blocks)
+
+    def preempt(self, slot: int, requeue: bool = True,
+                mode: str = "recompute") -> PreemptedRequest:
         """Evict the resident sequence in ``slot`` back to a waiting
         queue, returning its blocks (and the unconsumed reservation
-        tail) to the allocator immediately. The returned snapshot
-        resumes by re-prefilling the padded prompt plus every token
-        emitted so far — greedy output is token-identical to an
-        uninterrupted run (asserted in tests/test_preemption.py).
+        tail) to the allocator immediately.
+
+        ``mode="recompute"`` (default): the snapshot resumes by
+        re-prefilling the padded prompt plus every token emitted so
+        far — greedy output is token-identical to an uninterrupted run
+        (asserted in tests/test_preemption.py).
+
+        ``mode="swap"``: the slot's KV blocks are copied to the host
+        tier first (one batched device_get per layer), so resume only
+        re-maps them onto fresh device blocks — no recompute at all.
+        Emitted tokens, decode position and the pending token ride in
+        the snapshot verbatim; output stays token-identical because the
+        resumed state IS the preempted state (fuzzed against the
+        recompute path in tests/test_engine_fuzz.py). Raises when
+        ``can_swap(slot)`` does not hold — callers price and pick the
+        mode (docs/RUNTIME.md §8), the engine never falls back silently.
 
         ``requeue=True`` reinserts at the head of THIS engine's FIFO
         (standalone use); a pool passes ``requeue=False`` and routes the
         snapshot through its own EDF queue (``submit_resume``)."""
+        if mode not in ("recompute", "swap"):
+            raise ValueError(f"unknown preempt mode {mode!r}")
         s = self.slots[slot]
         if not s.active:
             raise ValueError(f"slot {slot} holds no sequence")
@@ -1445,13 +1887,32 @@ class ContinuousBatchingEngine:
             raise NotImplementedError(
                 "preemption needs the chunked-prefill path "
                 "(plain token prompts)")
-        seq = np.concatenate([s.seq_tokens,
-                              np.asarray(s.tokens, np.int32)])
-        req = PreemptedRequest(
-            s.request_id, seq, base_len=s.base_len, max_new=s.remaining,
-            submit_s=s.submit_s, requested_new=s.requested_new,
-            truncated=s.truncated, n_preempted=s.n_preempted + 1,
-            first_token_s=s.first_token_s)
+        if mode == "swap":
+            if not self.can_swap(slot):
+                raise ValueError(
+                    f"slot {slot} is not swappable (host tier off, "
+                    "non-pageable stack, or host pool full)")
+            host_ids = self.allocator.swap_out_alloc(len(s.blocks))
+            assert host_ids is not None  # can_swap checked availability
+            self._swap_out_blocks(s.blocks, host_ids)
+            req = PreemptedRequest(
+                s.request_id, s.seq_tokens, base_len=s.base_len,
+                max_new=s.remaining, submit_s=s.submit_s,
+                requested_new=s.requested_new, truncated=s.truncated,
+                n_preempted=s.n_preempted + 1,
+                first_token_s=s.first_token_s,
+                tokens=list(s.tokens), pos=int(self.pos[slot]),
+                pending_tok=int(self.pending_tok[slot]),
+                host_blocks=host_ids, host_engine_id=id(self))
+            self.n_swap_preempts += 1
+        else:
+            seq = np.concatenate([s.seq_tokens,
+                                  np.asarray(s.tokens, np.int32)])
+            req = PreemptedRequest(
+                s.request_id, seq, base_len=s.base_len, max_new=s.remaining,
+                submit_s=s.submit_s, requested_new=s.requested_new,
+                truncated=s.truncated, n_preempted=s.n_preempted + 1,
+                first_token_s=s.first_token_s)
         if self.kv_layout == "paged":
             self.allocator.free(s.blocks)
             self.allocator.unreserve(s.n_outstanding)
@@ -1465,8 +1926,32 @@ class ContinuousBatchingEngine:
                 prepadded=True, base_len=req.base_len,
                 requested_new=req.requested_new, truncated=req.truncated,
                 n_preempted=req.n_preempted,
-                first_token_s=req.first_token_s))
+                first_token_s=req.first_token_s,
+                swap=req if req.swapped else None))
         return req
+
+    def release_swap(self, req: PreemptedRequest) -> PreemptedRequest:
+        """Convert a swap snapshot back into a recompute snapshot,
+        freeing its host blocks — the escape hatch when the owning
+        engine is draining/retired and the snapshot must resume
+        elsewhere. Token identity is preserved: the recompute context is
+        the padded prompt plus the emitted tokens, and greedy re-prefill
+        regenerates the dropped pending token deterministically."""
+        if not req.swapped:
+            return req
+        if req.host_engine_id != id(self):
+            raise ValueError(
+                "swap snapshot is pinned to a different engine's host "
+                "pool")
+        self.allocator.host_free(req.host_blocks)
+        seq = np.concatenate([req.seq_tokens,
+                              np.asarray(req.tokens, np.int32)])
+        return PreemptedRequest(
+            req.request_id, seq, base_len=req.base_len,
+            max_new=req.max_new, submit_s=req.submit_s,
+            requested_new=req.requested_new, truncated=req.truncated,
+            n_preempted=req.n_preempted,
+            first_token_s=req.first_token_s)
 
     # ---- cancellation (docs/RUNTIME.md §11) ------------------------------
     def cancel(self, request_id: int) -> Optional[ContinuousResult]:
@@ -1488,9 +1973,14 @@ class ContinuousBatchingEngine:
             if w.request_id == request_id:
                 self.waiting.pop(qi)
                 # a requeued preemption carries its pre-eviction tokens
-                # in the prepadded context; a fresh prompt has none
-                emitted = w.prompt[w.base_len:] if w.prepadded \
-                    else np.zeros((0,), np.int32)
+                # in the prepadded context (recompute) or in the swap
+                # snapshot; a fresh prompt has none
+                if w.swap is not None:
+                    self.allocator.host_free(w.swap.host_blocks)
+                    emitted = np.asarray(w.swap.tokens, np.int32)
+                else:
+                    emitted = w.prompt[w.base_len:] if w.prepadded \
+                        else np.zeros((0,), np.int32)
                 self.n_cancelled += 1
                 return ContinuousResult(
                     request_id, np.asarray(emitted, np.int32),
@@ -1933,6 +2423,25 @@ class ContinuousBatchingEngine:
             "queue_depth": float(len(self.waiting)),
             "n_preempted": float(self.n_preempted),
             "n_cancelled": float(self.n_cancelled),
+            # host KV tier (docs/ARCHITECTURE.md §5)
+            "kv_host_blocks": float(self.kv_host_blocks),
+            "kv_host_free": float(
+                self.allocator.n_host_free
+                if self.kv_layout == "paged" else 0),
+            "kv_host_live": float(
+                self.allocator.n_host_live
+                if self.kv_layout == "paged" else 0),
+            "kv_host_cached": float(
+                self.allocator.n_host_cached
+                if self.kv_layout == "paged" else 0),
+            "n_swap_preempts": float(self.n_swap_preempts),
+            "n_swap_resumes": float(self.n_swap_resumes),
+            "n_spilled": float(
+                self.allocator.n_spilled
+                if self.kv_layout == "paged" else 0),
+            "n_unspilled": float(
+                self.allocator.n_unspilled
+                if self.kv_layout == "paged" else 0),
             "prefill_backlog_tokens": float(self.prefill_backlog_tokens),
             "token_budget": float(self.token_budget or 0),
             "spec_k": float(min(max(0, self.spec_k), self.spec_max)),

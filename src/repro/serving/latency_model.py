@@ -161,6 +161,38 @@ def predicted_token_iter_ms(base_ms: float, per_token_ms: float,
     return base_ms + per_token_ms * max(0, tokens)
 
 
+def fit_swap_cost(samples: Sequence[Tuple[int, float]]
+                  ) -> Tuple[float, float]:
+    """Calibrate one-way KV swap cost from MEASURED transfers
+    (docs/RUNTIME.md §8: the engine records (bytes moved, wall ms) for
+    every host-tier swap-out/swap-in and block spill/unspill).
+
+    Fits ``transfer_ms ≈ base + per_mb * megabytes`` by least squares
+    and returns ``(base_ms, ms_per_mb)`` — the per-transfer launch
+    overhead and the inverse host-link bandwidth. This is the term that
+    makes recompute-vs-swap a costed decision: ``_pick_preempt_mode``
+    compares ``2 * predicted_swap_ms(...)`` (out + back in) against the
+    recompute prefill priced by :func:`fit_token_cost`. With fewer than
+    two distinct sizes the slope is unidentifiable and ``ms_per_mb = 0``.
+    """
+    if not samples:
+        return 0.0, 0.0
+    xs = [max(0.0, float(b)) / 1e6 for b, _ in samples]
+    ys = [float(ms) for _, ms in samples]
+    base, slope = _least_squares(xs, ys)
+    slope = max(0.0, slope)
+    # re-anchor the intercept to the clamped slope so the prediction
+    # still passes through the sample mean
+    base = max(0.0, sum(ys) / len(ys) - slope * sum(xs) / len(xs))
+    return base, slope
+
+
+def predicted_swap_ms(base_ms: float, ms_per_mb: float, mb: float) -> float:
+    """One-way transfer latency the :func:`fit_swap_cost` model predicts
+    for ``mb`` megabytes of KV pages."""
+    return base_ms + ms_per_mb * max(0.0, mb)
+
+
 def fit_occupancy(samples: Sequence[Tuple[int, float]]) -> float:
     """Calibrate mean KV tokens per resident sequence from MEASURED
     occupancy (docs/RUNTIME.md: the pool records

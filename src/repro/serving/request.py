@@ -18,7 +18,9 @@ _counter = itertools.count()
 #: lifecycle states: a request is QUEUED from submission until an engine
 #: assigns it a slot, PREFILLING while its prompt chunks advance,
 #: DECODING once tokens stream, and ends in exactly one terminal state.
-#: Preemption sends DECODING back to QUEUED (recompute-on-resume).
+#: Preemption sends DECODING back to QUEUED; the edge is annotated with
+#: whether the KV was swapped to the host tier (resume skips recompute)
+#: or freed (recompute-on-resume).
 QUEUED = "queued"
 PREFILL = "prefill"
 DECODE = "decode"
@@ -64,6 +66,9 @@ class RequestLifecycle:
         self.finish_s = -1.0       # terminal transition
         self.n_tokens = 0
         self.n_preempted = 0
+        #: preemptions whose KV went to the host tier instead of being
+        #: recomputed (subset of ``n_preempted``)
+        self.n_swapped = 0
         #: ``on_event(lifecycle, state)`` after every transition;
         #: ``on_token(lifecycle, token, index)`` per emitted token
         self.on_event = on_event
@@ -73,9 +78,11 @@ class RequestLifecycle:
     def terminal(self) -> bool:
         return self.state in TERMINAL_STATES
 
-    def to(self, state: str, now_s: float) -> None:
+    def to(self, state: str, now_s: float, swapped: bool = False) -> None:
         """Transition to ``state``, stamping the matching timestamp.
-        Raises ``ValueError`` on an edge outside
+        ``swapped`` annotates the preemption edge (DECODE -> QUEUED):
+        True means the KV pages moved to the host tier and resume will
+        skip recompute. Raises ``ValueError`` on an edge outside
         ``LIFECYCLE_TRANSITIONS`` (e.g. FINISHED -> anything)."""
         if state not in LIFECYCLE_TRANSITIONS:
             raise ValueError(f"unknown lifecycle state {state!r}")
@@ -88,6 +95,8 @@ class RequestLifecycle:
             self.admit_s = now_s
         elif state == QUEUED:
             self.n_preempted += 1  # DECODE -> QUEUED is preemption
+            if swapped:
+                self.n_swapped += 1
         elif state in TERMINAL_STATES:
             self.finish_s = now_s
         if self.on_event is not None:

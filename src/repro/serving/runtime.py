@@ -54,7 +54,7 @@ from repro.serving import request as lifecycle
 from repro.serving.engine import (ContinuousBatchingEngine,
                                   ContinuousResult, PreemptedRequest,
                                   supports_prefix_cache,
-                                  supports_speculation)
+                                  supports_speculation, to_recompute)
 from repro.serving.request import RequestLifecycle
 
 # instance lifecycle states (docs/RUNTIME.md state machine)
@@ -204,6 +204,8 @@ class ModelInstancePool:
                  preempt_margin_ms: float = 50.0,
                  preempt_cooldown_steps: int = 8,
                  max_preemptions: int = 2,
+                 kv_host_blocks: int = 0,
+                 preempt_mode: str = "auto",
                  token_budget: Optional[int] = None,
                  prefix_cache: bool = False,
                  spec_k: int = 0,
@@ -274,6 +276,26 @@ class ModelInstancePool:
         self.n_preempted = 0
         self.preempts_by_model: Dict[str, int] = {m: 0 for m in configs}
         self._last_preempt_step: Dict[str, int] = {}
+        #: host KV tier (docs/RUNTIME.md §8): per-instance host-memory
+        #: block pool preempted sequences swap into instead of being
+        #: recomputed. ``preempt_mode`` picks the eviction flavour:
+        #: "recompute" (legacy), "swap" (always swap when the slot can),
+        #: or "auto" — price both with the calibrated token-cost and
+        #: swap-bandwidth fits and take the cheaper (``swap_cost``).
+        if preempt_mode not in ("recompute", "swap", "auto"):
+            raise ValueError(
+                f"preempt_mode must be 'recompute', 'swap' or 'auto', "
+                f"got {preempt_mode!r}")
+        if kv_host_blocks < 0:
+            raise ValueError(
+                f"kv_host_blocks must be >= 0, got {kv_host_blocks}")
+        if kv_host_blocks > 0 and kv_layout != "paged":
+            raise ValueError(
+                "kv_host_blocks needs kv_layout='paged' (the host tier "
+                "swaps block-granular KV)")
+        self.kv_host_blocks = kv_host_blocks
+        self.preempt_mode = preempt_mode
+        self.n_swap_preempted = 0
         #: per-model per-iteration token budget applied to every live
         #: engine (None = uncapped); the scheduler's third knob
         self.token_budgets: Dict[str, Optional[int]] = {
@@ -522,7 +544,10 @@ class ModelInstancePool:
             kw = {"kv_layout": "paged", "block_size": self.block_size,
                   "kv_blocks": grant,
                   "prefix_cache": self.prefix_cache
-                  and supports_prefix_cache(self.configs[model])}
+                  and supports_prefix_cache(self.configs[model]),
+                  # host tier is single-device: sharded instances keep
+                  # recompute-on-resume (the engine rejects the combo)
+                  "kv_host_blocks": self.kv_host_blocks if tp == 1 else 0}
         if self.spec_cap > 0 and supports_speculation(self.configs[model]):
             kw["spec_k"] = self.spec_cap
         tmpl = self._templates.get((model, tp))
@@ -627,10 +652,12 @@ class ModelInstancePool:
         (its KV slot cache) is dropped so the memory really frees."""
         for model, lst in self.instances.items():
             keep = []
+            retired_any = False
             for inst in lst:
                 if inst.state == DRAINING and inst.n_resident == 0:
                     inst.state = RETIRED
                     inst.engine = None
+                    retired_any = True
                     if self.kv_blocks_free is not None:
                         # the instance's KV block grant returns to the
                         # shared budget (the paged analogue of dropping
@@ -648,6 +675,13 @@ class ModelInstancePool:
                 # this is always safe)
                 for key in [k for k in self._templates if k[0] == model]:
                     self._templates.pop(key)
+                if retired_any:
+                    # per-model preemption bookkeeping dies with the
+                    # last instance: a model respawned after scale_to(0)
+                    # must not start inside a stale cooldown window or
+                    # inherit an inflated preempt count
+                    self.preempts_by_model[model] = 0
+                    self._last_preempt_step.pop(model, None)
 
     # ---- router (docs/RUNTIME.md admission rules) ------------------------
     def submit(self, model: str, prompt: np.ndarray, slo_ms: float = 1000.0,
@@ -695,10 +729,22 @@ class ModelInstancePool:
             req = self._dequeue(model, request_id)
             if req is not None:
                 # a preempted snapshot carries its pre-eviction tokens
-                tokens = req.resume.seq_tokens[req.resume.base_len:] \
-                    if req.resume is not None else np.zeros((0,), np.int32)
-                return self._finish_cancel(req, None,
-                                           np.asarray(tokens, np.int32))
+                snap = req.resume
+                if snap is not None and snap.swapped:
+                    # the snapshot will never resume: its host blocks go
+                    # back to the source engine's host tier (nothing to
+                    # free when that engine is already retired — the
+                    # host pool died with it)
+                    src = self._swap_source(model, snap)
+                    if src is not None:
+                        src.engine.allocator.host_free(snap.host_blocks)
+                    tokens = np.asarray(snap.tokens, np.int32)
+                elif snap is not None:
+                    tokens = np.asarray(snap.seq_tokens[snap.base_len:],
+                                        np.int32)
+                else:
+                    tokens = np.zeros((0,), np.int32)
+                return self._finish_cancel(req, None, tokens)
         for inst in self.live():
             for erid, req in list(inst.requests.items()):
                 if req.request_id != request_id:
@@ -747,10 +793,20 @@ class ModelInstancePool:
             for i in self.running(model))
         qdepth = len(self.queues[model])
         backlog = self.prefill_backlog_tokens(model)
-        queued_tokens = sum(
-            (len(r.resume.seq_tokens) if r.resume is not None
-             else len(r.prompt)) + r.max_new_tokens
-            for _, _, r in self.queues[model])
+
+        def _queued_work(r: PoolRequest) -> int:
+            if r.resume is None:
+                return len(r.prompt) + r.max_new_tokens
+            # a preempted snapshot owes its REMAINING decode tokens (not
+            # the original budget — tokens already emitted are not work
+            # ahead of the caller), plus the full context re-prefill in
+            # recompute mode; swapped snapshots skip recompute entirely,
+            # so their context contributes nothing
+            ctx = 0 if r.resume.swapped else len(r.resume.seq_tokens)
+            return ctx + r.resume.max_new
+
+        queued_tokens = sum(_queued_work(r)
+                            for _, _, r in self.queues[model])
         work = backlog + queued_tokens
         if not admissible_now:
             work += prompt_len + max_new_tokens
@@ -822,6 +878,9 @@ class ModelInstancePool:
         best = None
         for inst in self.running(model):
             eng = inst.engine
+            if req.resume is not None and req.resume.swapped \
+                    and id(eng) != req.resume.host_engine_id:
+                continue  # a swapped head only fits its source engine
             for slot, erid, freeable in eng.preemption_candidates():
                 vreq = inst.requests.get(erid)
                 if vreq is None or vreq.n_preempted >= self.max_preemptions:
@@ -838,19 +897,91 @@ class ModelInstancePool:
         if best is None:
             return False
         _, inst, slot, erid = best
-        snapshot = inst.engine.preempt(slot, requeue=False)
+        mode = self._pick_preempt_mode(inst.engine, slot)
+        snapshot = inst.engine.preempt(slot, requeue=False, mode=mode)
         vreq = inst.requests.pop(erid)
         vreq.resume = snapshot
         vreq.n_preempted += 1
+        if mode == "swap":
+            self.n_swap_preempted += 1
         if vreq.lifecycle is not None and not vreq.lifecycle.terminal:
-            vreq.lifecycle.to(lifecycle.QUEUED, now)  # DECODE -> QUEUED
-        self._emit(vreq, "preempted", instance_id=inst.instance_id)
+            # DECODE -> QUEUED, annotated with HOW the edge was taken:
+            # swapped KV waits in the host tier, recompute re-prefills
+            vreq.lifecycle.to(lifecycle.QUEUED, now,
+                              swapped=(mode == "swap"))
+        self._emit(vreq, "preempted", instance_id=inst.instance_id,
+                   swapped=(mode == "swap"))
         heapq.heappush(self.queues[model],
                        (vreq.deadline_s, next(_seq), vreq))
         self.n_preempted += 1
         self.preempts_by_model[model] += 1
         self._last_preempt_step[model] = self.n_steps
         return True
+
+    def _pick_preempt_mode(self, eng: ContinuousBatchingEngine,
+                           slot: int) -> str:
+        """The recompute-vs-swap decision as a COSTED choice
+        (docs/RUNTIME.md §8). ``recompute`` resumes by re-prefilling the
+        victim's whole context: priced with the calibrated token-cost
+        fit. ``swap`` pays two PCIe-ish transfers (out now, in at
+        resume): priced with the swap-bandwidth fit over observed
+        transfers. Uncalibrated fits prefer swap whenever the host tier
+        has room — a transfer is the only way to collect swap samples,
+        and recompute cost grows quadratically with context while swap
+        cost is linear in resident blocks."""
+        if self.preempt_mode == "recompute" or not eng.can_swap(slot):
+            return "recompute"
+        if self.preempt_mode == "swap":
+            return "swap"
+        pos = int(eng.pos[slot])
+        base, per_tok = self.token_cost()
+        swap_base, per_mb = self.swap_cost()
+        if per_tok <= 0.0 or per_mb <= 0.0:
+            return "swap"
+        recompute_ms = base + pos * per_tok
+        mb = len(eng.slots[slot].blocks) \
+            * eng.swap_bytes_per_block / 1e6
+        swap_ms = 2.0 * (swap_base + mb * per_mb)
+        return "swap" if swap_ms < recompute_ms else "recompute"
+
+    def swap_cost(self) -> Tuple[float, float]:
+        """Calibrated ``(base_ms, ms_per_mb)`` swap-transfer model over
+        every live engine's observed (bytes, ms) samples
+        (``latency_model.fit_swap_cost``); ``(0, 0)`` before any
+        transfer has been measured."""
+        samples: List[Tuple[int, float]] = []
+        for i in self.live():
+            samples.extend(
+                getattr(i.engine, "swap_samples", [])[-_SAMPLE_WINDOW:])
+        if len(samples) < 4:
+            return 0.0, 0.0
+        return lm.fit_swap_cost(samples[-_SAMPLE_WINDOW:])
+
+    def _swap_source(self, model: str,
+                     snap: PreemptedRequest) -> Optional[ModelInstance]:
+        """The instance whose engine's host pool holds ``snap``'s
+        swapped blocks (None once it is retired)."""
+        for inst in self.instances[model]:
+            if inst.engine is not None \
+                    and id(inst.engine) == snap.host_engine_id:
+                return inst
+        return None
+
+    def _repin_swap(self, model: str, req: PoolRequest) -> None:
+        """A swap snapshot can only resume on the engine holding its
+        host blocks. When that engine is draining or gone, convert the
+        snapshot back to recompute so the request stays routable —
+        releasing the host blocks while the engine still exists, or
+        rebuilding from the carried tokens after it is retired (the host
+        pool died with it)."""
+        snap = req.resume
+        if snap is None or not snap.swapped:
+            return
+        src = self._swap_source(model, snap)
+        if src is None:
+            req.resume = to_recompute(snap)
+        elif src.state != RUNNING:
+            req.resume = src.engine.release_swap(snap)
 
     def _reject(self, req: PoolRequest) -> PoolResult:
         now = self.now()
@@ -889,6 +1020,10 @@ class ModelInstancePool:
                           if cap - i.n_resident > 0]
             while q:
                 deadline_s, _, req = q[0]
+                # swap snapshots resume only on their source engine; a
+                # drained/retired source downgrades them to recompute
+                # BEFORE any admissibility question is asked
+                self._repin_swap(model, req)
                 if self.strict_admission:
                     hopeless = now > deadline_s
                     if not hopeless and t1 > 0.0:
@@ -904,7 +1039,13 @@ class ModelInstancePool:
                             if cap - i.n_resident > 0]
 
                 def _cands():
-                    return [i for i in open_insts
+                    insts = open_insts
+                    if req.resume is not None and req.resume.swapped:
+                        # swapped KV is resident in ONE engine's host
+                        # pool: only that engine can re-map it
+                        insts = [i for i in insts if id(i.engine)
+                                 == req.resume.host_engine_id]
+                    return [i for i in insts
                             if i.engine.admissible(
                                 len(req.prompt), req.max_new_tokens,
                                 pending.get(i.instance_id, 0),
@@ -983,13 +1124,18 @@ class ModelInstancePool:
                     req.slo_ms / 1000.0, max(1, self.m_c(req.model)))
         res = PoolResult(req.request_id, req.model, inst.instance_id,
                          tokens, req.submit_s, req.admit_s, now, req.slo_ms,
-                         utility=u, first_token_s=req.first_token_s)
+                         utility=0.0 if r.cancelled else u,
+                         cancelled=bool(r.cancelled),
+                         first_token_s=req.first_token_s)
         inst.n_served += 1
         hist.append(res)
         # client-observed timing aggregates (satellite of RUNTIME §11):
         # recorded on the pool clock at completion, so they exist with or
-        # without an HTTP front-end in the loop
-        if res.first_token_s >= 0:
+        # without an HTTP front-end in the loop. Cancelled results are
+        # EXCLUDED: a disconnect storm's partial timings would otherwise
+        # drag ttft/tpot p99 below what completed clients observed, even
+        # though cancellations are already excluded from SLO attainment
+        if res.first_token_s >= 0 and not res.cancelled:
             self.ttft_samples.append(res.ttft_ms)
             if res.tpot_ms >= 0:
                 self.tpot_samples.append(res.tpot_ms)
@@ -997,8 +1143,11 @@ class ModelInstancePool:
                 del self.ttft_samples[:-_SAMPLE_WINDOW]
             if len(self.tpot_samples) > 2 * _SAMPLE_WINDOW:
                 del self.tpot_samples[:-_SAMPLE_WINDOW]
+        if res.cancelled:
+            self.n_cancelled += 1
         if req.lifecycle is not None and not req.lifecycle.terminal:
-            req.lifecycle.to(lifecycle.FINISHED, now)
+            req.lifecycle.to(lifecycle.CANCELLED if res.cancelled
+                             else lifecycle.FINISHED, now)
         self._emit(req, "finished", tokens=[int(t) for t in tokens],
                    latency_ms=res.latency_ms, utility=u,
                    truncated=bool(r.truncated),
@@ -1148,6 +1297,7 @@ class ModelInstancePool:
         self.n_rejected = 0
         self.n_cancelled = 0
         self.n_preempted = 0
+        self.n_swap_preempted = 0
         self.preempts_by_model = {m: 0 for m in self.configs}
         self._last_preempt_step = {}
         self.n_steps = 0
@@ -1238,6 +1388,17 @@ class ModelInstancePool:
         what prefix sharing saves."""
         budget_blocks = self.kv_block_budget or 0
         committed = sum(i.kv_blocks for i in self.live())
+        # host-tier occupancy across live paged engines (0 everywhere
+        # when no engine carries a host pool)
+        host_blocks = host_free = host_live = host_cached = 0
+        for i in self.live():
+            if i.engine.kv_layout != "paged":
+                continue
+            a = i.engine.allocator
+            host_blocks += a.n_host_blocks
+            host_free += a.n_host_free
+            host_live += a.n_host_live
+            host_cached += a.n_host_cached
         return {
             "used_tokens": float(self.kv_used_tokens()),
             "allocated_tokens": float(sum(
@@ -1248,6 +1409,12 @@ class ModelInstancePool:
             "tokens_per_seq": self.occupancy_tokens_per_seq(),
             "shared_frac": self.kv_shared_frac(),
             "prefix_hit_rate": self.prefix_hit_rate(),
+            "host_blocks": float(host_blocks),
+            "host_free": float(host_free),
+            "host_live": float(host_live),
+            "host_cached": float(host_cached),
+            "host_frac": float((host_live + host_cached) / host_blocks)
+            if host_blocks else 0.0,
         }
 
     def slot_ms(self, model: str) -> float:
@@ -1296,6 +1463,7 @@ class ModelInstancePool:
     def stats(self) -> Dict[str, float]:
         t1, c = self.contention()
         base, per_tok = self.token_cost()
+        swap_base, per_mb = self.swap_cost()
         out = {
             "n_steps": float(self.n_steps),
             "live_instances": float(self.total_live()),
@@ -1304,11 +1472,14 @@ class ModelInstancePool:
             "n_rejected": float(self.n_rejected),
             "n_cancelled": float(self.n_cancelled),
             "n_preempted": float(self.n_preempted),
+            "n_swap_preempted": float(self.n_swap_preempted),
             "prefill_backlog_tokens": float(self.prefill_backlog_tokens()),
             "contention_t1_ms": t1,
             "contention_c": c,
             "token_base_ms": base,
             "token_per_ms": per_tok,
+            "swap_base_ms": swap_base,
+            "swap_ms_per_mb": per_mb,
             "spec_accept_rate": self.spec_accept_rate(),
             # client-observed timing percentiles over the trailing window
             # (pool clock, HTTP-independent); 0.0 before any completion

@@ -1,22 +1,29 @@
 """Randomized differential stress harness for the continuous engine
 (docs/ARCHITECTURE.md §5).
 
-Each seeded schedule interleaves submit / step / preempt-resume /
+Each seeded schedule interleaves submit / step / preempt-resume (both
+recompute and host-tier SWAP flavours on offload-capable variants) /
 CANCEL ops — plus live speculative-depth retuning on spec-capable
 variants — over a pool of mixed-length prompts with shared AND
-divergent prefixes, across eight engine variants (dense + paged
+divergent prefixes, across nine engine variants (dense + paged
 layouts, prefix cache on/off, token budget on/off in BOTH layouts —
 the dense+budget variant runs the staging-cache chunked-prefill path,
 paged+budget the fused one — tight block budgets that force LRU
-reclaim, speculative k up to 4 with mid-flight k toggling, and a
+reclaim, speculative k up to 4 with mid-flight k toggling, a
 kitchen-sink variant stacking prefix cache + tight blocks + budget +
-speculation), and asserts:
+speculation + a host KV tier, and a dedicated offload variant whose
+tight device budget forces prefix-block spills to host alongside
+swap-mode preemption), and asserts:
 
 * after EVERY operation — allocator conservation:
   ``n_free + n_cached + n_live == n_blocks`` (disjoint id sets),
   ``n_available >= 0``, refcount(b) == number of slots mapping b (no
   block owned by two slots without a refcount), block tables mirror the
-  slot block lists, the null block is never mapped;
+  slot block lists, the null block is never mapped; host-tier
+  conservation on offload variants:
+  ``n_host_free + n_host_cached + n_host_live == n_host_blocks``
+  (disjoint id sets) with the live host population EXACTLY the union
+  of the waiting swap snapshots' block lists;
 * for EVERY finished request — greedy output token-identical to a
   per-request uninterrupted oracle run (fresh single-slot dense engine,
   shared weights), regardless of how the schedule batched, preempted,
@@ -114,6 +121,23 @@ def _check_invariants(eng, ctx: str) -> None:
                 f"{al.refcount(b)}"
         assert set(counts) == out, \
             f"{ctx}: live blocks != mapped blocks"
+        if al.n_host_blocks:
+            hfree, hlive = set(al._host_free), set(al._host_live)
+            hcache = set(al._host_cache.values())
+            assert not (hfree & hcache) and not (hfree & hlive) \
+                and not (hcache & hlive), \
+                f"{ctx}: host-tier id sets overlap"
+            assert len(hfree) + len(hcache) + len(hlive) \
+                == al.n_host_blocks, \
+                f"{ctx}: host conservation broken " \
+                f"({len(hfree)}+{len(hcache)}+{len(hlive)} " \
+                f"!= {al.n_host_blocks})"
+            swap_ids = [b for w in eng.waiting if w.swap is not None
+                        for b in w.swap.host_blocks]
+            assert len(swap_ids) == len(set(swap_ids)), \
+                f"{ctx}: host block shared by two swap snapshots"
+            assert set(swap_ids) == hlive, \
+                f"{ctx}: swap-pinned host blocks != waiting snapshots"
     if eng.block_tables is not None:
         for i, s in enumerate(eng.slots):
             if s.active and not s.prefilling:
@@ -130,7 +154,7 @@ def _check_invariants(eng, ctx: str) -> None:
                 assert not eng.block_tables[i].any(), ctx
 
 
-N_VARIANTS = 8
+N_VARIANTS = 9
 
 
 def _engine_variant(cfg, variant: int):
@@ -190,14 +214,26 @@ def _engine_variant(cfg, variant: int):
         return ContinuousBatchingEngine(
             cfg, max_slots=3, max_seq=MAX_SEQ, seed=0,
             share_from=_template(cfg), token_budget=12)
-    # kitchen sink: prefix cache + tight blocks + token budget +
-    # speculation stacked — every reclaim/rollback/share path at once
+    if variant == 7:
+        # kitchen sink: prefix cache + tight blocks + token budget +
+        # speculation + host tier stacked — every reclaim/rollback/
+        # share/spill path at once
+        kw = {"prefix_cache": True} if cfg.name in ("tiny", "tiny-tail") \
+            else {}
+        return ContinuousBatchingEngine(
+            cfg, max_slots=4, max_seq=MAX_SEQ, seed=0,
+            share_from=_template(cfg), kv_layout="paged", block_size=8,
+            kv_blocks=18, token_budget=12, kv_host_blocks=10,
+            **kw, **spec)
+    # KV offload: a tight device budget under prefix caching forces LRU
+    # spills to the host tier, while the preempt op below exercises the
+    # swap-mode snapshot/resume path against the recompute oracle
     kw = {"prefix_cache": True} if cfg.name in ("tiny", "tiny-tail") \
         else {}
     return ContinuousBatchingEngine(
         cfg, max_slots=4, max_seq=MAX_SEQ, seed=0,
         share_from=_template(cfg), kv_layout="paged", block_size=8,
-        kv_blocks=18, token_budget=12, **kw, **spec)
+        kv_blocks=16, kv_host_blocks=12, **kw)
 
 
 def _run_schedule(cfg, seed: int) -> None:
@@ -247,7 +283,16 @@ def _run_schedule(cfg, seed: int) -> None:
         else:
             cands = eng.decoding_slots
             if cands and eng.chunked:
-                eng.preempt(rng.choice(cands))  # requeue + resume
+                slot = rng.choice(cands)
+                # offload-capable engines flip a coin between the two
+                # eviction flavours: swap-resume must stay
+                # token-identical to recompute-resume (both are checked
+                # against the same uninterrupted oracle below)
+                if eng.swap_ok and eng.can_swap(slot) \
+                        and rng.random() < 0.5:
+                    eng.preempt(slot, mode="swap")
+                else:
+                    eng.preempt(slot)  # requeue + resume
         _check_invariants(eng, ctx)
 
     guard = 600
@@ -279,13 +324,16 @@ def _run_schedule(cfg, seed: int) -> None:
         assert al.n_live == 0 and al.n_reserved == 0, \
             f"{ctx}: leaked references after drain"
         assert al.n_free + al.n_cached == al.n_blocks, ctx
+        assert al.n_host_live == 0, \
+            f"{ctx}: leaked host-tier blocks after drain"
+        assert al.n_host_free + al.n_host_cached == al.n_host_blocks, ctx
 
 
 def test_fuzz_smoke_schedules():
     """Tier-1 slice of the sweep: a handful of schedules covering every
     variant of the canonical tiny model once — including the
-    speculative (4, 5), dense-staging (6) and kitchen-sink (7)
-    variants."""
+    speculative (4, 5), dense-staging (6), kitchen-sink (7) and KV
+    offload (8) variants."""
     for seed in range(N_VARIANTS):
         _run_schedule(TINY, seed)
 
@@ -293,7 +341,7 @@ def test_fuzz_smoke_schedules():
 @pytest.mark.slow
 def test_fuzz_full_sweep_tiny():
     """The CI sweep: >= ENGINE_FUZZ_SCHEDULES seeded schedules (default
-    200) on the canonical model across all eight engine variants."""
+    200) on the canonical model across all nine engine variants."""
     for seed in range(N_SCHEDULES):
         _run_schedule(TINY, seed)
 

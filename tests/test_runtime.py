@@ -311,7 +311,7 @@ def test_guard_degrades_spec_k_first():
     # the state vector carries the acceptance feature, winsorized to [0,1]
     pool.spec_accept_rate = lambda: 3.7
     s = sched._state("tiny-a")
-    assert s.shape == (POOL_STATE_DIM,) == (12,)
+    assert s.shape == (POOL_STATE_DIM,) == (13,)
     assert s[10] == 1.0
     pool.spec_accept_rate = lambda: -0.5
     assert sched._state("tiny-a")[10] == 0.0

@@ -258,7 +258,8 @@ def test_guard_degrades_tp_degree_before_concurrency():
     assert sched.guard_interventions == 1
     assert pool.tp_degrees[model] == 1
     # the 12th state feature is the shared-device-set utilization
+    from repro.serving.bcedge import POOL_STATE_DIM
     s = sched._state(model)
-    assert s.shape == (12,)
+    assert s.shape == (POOL_STATE_DIM,)
     pool.scale_to(model, 1)
     assert sched._state(model)[11] == 1.0  # 1 of 1 devices in use
